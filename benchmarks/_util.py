@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: timing, CSV emit, multi-device subprocess."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+OUTDIR = ROOT / "experiments" / "bench"
+
+
+def timeit(fn, *args, n: int = 3, warmup: int = 1, **kw) -> tuple:
+    import jax
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / n
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print rows as CSV and persist under experiments/bench/<name>.csv."""
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    cols = list(rows[0])
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    text = "\n".join(lines)
+    print(f"\n=== {name} ===")
+    print(text)
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    (OUTDIR / f"{name}.csv").write_text(text + "\n")
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 1200) -> str:
+    """Run a snippet with N fake devices; return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{proc.stderr[-3000:]}")
+    return proc.stdout

@@ -1,0 +1,90 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--strategy ramora]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks._util import ROOT
+
+FIX_HINTS = {
+    ("collective", "train"): "stage/overlap FSDP+TP collectives; hierarchical"
+                             " schedule over (pod,data); chunked vocab loss",
+    ("collective", "prefill"): "shard activations tighter (SP); fuse TP"
+                               " collectives; avoid replicated logits",
+    ("collective", "decode"): "keep cache local (context parallel);"
+                              " tree-reduce single-token logits",
+    ("memory", "train"): "less remat recompute traffic; bigger fused blocks",
+    ("memory", "prefill"): "flash tiles resident in VMEM; avoid cache"
+                           " rewrite round-trips",
+    ("memory", "decode"): "decode is intrinsically HBM-bound (weights+KV per"
+                          " token); shrink KV (GQA/window/quant), batch more",
+    ("compute", "train"): "at compute roofline — increase arithmetic"
+                          " intensity or chips",
+    ("compute", "prefill"): "at compute roofline",
+    ("compute", "decode"): "at compute roofline",
+}
+
+
+def load(strategy: str) -> list[dict]:
+    rows = []
+    for sub in ("dryrun", "dryrun_opt"):
+        d = ROOT / "experiments" / sub
+        if not d.exists():
+            continue
+        for fp in sorted(d.glob(f"*__{strategy}.json")):
+            rows.append(json.loads(fp.read_text()))
+    return rows
+
+
+def table(strategy: str = "ramora") -> str:
+    from repro.configs import ARCHS, SHAPES
+    rows = load(strategy)
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck |"
+        " roofline frac | MODEL_FLOPS/HLO | GiB/dev (16GiB) | multipod |"
+        " what moves the dominant term down |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = by.get((arch, shape, "16x16"))
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — |"
+                             f" — | — | SKIP: {r['reason']} |")
+                continue
+            roof = r["roofline"]
+            mem = r["memory"]
+            mp = by.get((arch, shape, "2x16x16"), {})
+            mp_ok = "ok" if mp.get("status") == "ok" else "?"
+            kind = ("train" if shape == "train_4k" else
+                    "prefill" if shape == "prefill_32k" else "decode")
+            hint = FIX_HINTS[(roof["bottleneck"], kind)]
+            peak = mem.get("peak_floor_tpu_gib_per_dev",
+                           mem.get("peak_tpu_adjusted_gib_per_dev",
+                                   mem["peak_gib_per_dev"]))
+            fits = "✓" if peak < 16.0 else "✗"
+            lines.append(
+                f"| {arch} | {shape} | {roof['compute_s']:.2e} |"
+                f" {roof['memory_s']:.2e} | {roof['collective_s']:.2e} |"
+                f" {roof['bottleneck']} | {roof['roofline_fraction']:.2f} |"
+                f" {roof['useful_flops_ratio']:.2f} |"
+                f" {peak:.1f} {fits} | {mp_ok} | {hint} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="ramora")
+    args = ap.parse_args()
+    print(table(args.strategy))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4a,fig7] [--skip-slow]
+
+Each module prints a CSV (also persisted to experiments/bench/<name>.csv)
+and asserts its paper-anchor directional claims (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip table1 (512-device compiles) unless cached")
+    args = ap.parse_args()
+
+    from benchmarks import fig4a, fig4b, fig4c, fig7, table1
+    suites = {"fig4a": fig4a.main, "fig4b": fig4b.main, "fig4c": fig4c.main,
+              "fig7": fig7.main, "table1": table1.main}
+    if args.only:
+        keep = args.only.split(",")
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    failures = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] OK ({time.time() - t0:.1f}s)\n")
+        except Exception as e:
+            failures.append(name)
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+    print("all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving with continuous batching: more requests than slots, mixed
+prompt lengths and budgets; verifies every request completes and that the
+engine's decode output is identical to a naive sequential reference.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import decode_step, forward, init, logits_fn
+from repro.models.cache import init_cache
+from repro.serve import Request, ServeEngine
+
+
+def reference_greedy(cfg, params, prompt, max_new, max_len):
+    """Naive single-sequence greedy decode (the correctness oracle)."""
+    cache_t = init_cache(cfg, 1, max_len)
+    hidden, cache, _ = forward(params, cfg, jnp.asarray(prompt)[None],
+                               cache=cache_t)
+    logits = logits_fn(params, cfg, hidden[:, -1:, :])[..., :cfg.vocab_size]
+    toks = [int(jnp.argmax(logits[0, 0]))]
+    pos = len(prompt)
+    for _ in range(max_new - 1):
+        logits, cache = decode_step(params, cfg,
+                                    cache, jnp.asarray([[toks[-1]]], jnp.int32),
+                                    jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    return toks
+
+
+def main():
+    cfg = reduced(get_arch("gemma2-27b"))  # local+global, softcaps — the
+    params = init(jax.random.PRNGKey(0), cfg)  # hardest cache layout
+    rng = np.random.default_rng(0)
+
+    reqs = []
+    for uid in range(9):
+        plen = int(rng.integers(3, 24))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(uid=uid, prompt=prompt,
+                            max_new_tokens=int(rng.integers(4, 12))))
+
+    engine = ServeEngine(cfg, params, max_slots=4, max_len=128)
+    t0 = time.time()
+    results = engine.run(reqs)
+    dt = time.time() - t0
+    total = sum(len(r.tokens) for r in results)
+    print(f"{len(reqs)} requests on 4 slots: {total} tokens in {dt:.1f}s "
+          f"({engine.stats['decode_steps']} batched decode steps)")
+
+    # verify continuous batching == sequential decoding, request by request
+    for r, req in zip(results, reqs):
+        ref = reference_greedy(cfg, params, req.prompt, req.max_new_tokens, 128)
+        assert r.tokens == ref, f"request {r.uid}: {r.tokens} != {ref}"
+    print("OK: all requests complete; batched == sequential greedy decode")
+
+
+if __name__ == "__main__":
+    main()

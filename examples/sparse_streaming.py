@@ -1,0 +1,68 @@
+"""The paper's irregular-workload story on this framework's kernels:
+dense GEMM vs scatter-gather (packed vs naive) vs SpMM — paper Fig. 4a's
+regular→irregular sweep, plus the Ogopogo packed-stream bandwidth win (C5c).
+
+    PYTHONPATH=src python examples/sparse_streaming.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def bench(fn, *args, n=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / n
+
+
+def main():
+    k = jax.random.PRNGKey(0)
+    M = N = K = 256
+
+    # 1) dense GEMM with fused in-stream epilogue (C1 + C5b)
+    x = jax.random.normal(k, (M, K), jnp.float32)
+    w = jax.random.normal(k, (K, N), jnp.float32)
+    out, t_gemm = bench(ops.gemm, x, w, scale=0.5, act="gelu", impl="interpret")
+    exp = ref.gemm_ref(x, w, scale=0.5, act="gelu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+    print(f"dense GEMM + fused epilogue     {t_gemm*1e3:8.1f} ms   (exact)")
+
+    # 2) irregular gather: naive one-row-at-a-time vs packed (8 rows / wide
+    #    flit, index-sorted 'temporal coalescer') — the C5c mechanism
+    table = jax.random.normal(k, (4096, 64), jnp.float32)
+    idx = jax.random.randint(k, (2048,), 0, 4096)
+    g1, t_naive = bench(ops.gather_rows, table, idx, impl="interpret")
+    g2, t_packed = bench(ops.packed_gather_rows, table, idx,
+                         impl="interpret", pack=8)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    print(f"gather naive                    {t_naive*1e3:8.1f} ms")
+    print(f"gather packed (8/flit, sorted)  {t_packed*1e3:8.1f} ms   (exact)")
+
+    # 3) SpMM via the same gather+segment-sum streaming pattern (Fig. 4a's
+    #    most irregular point): y[r] = sum_j A[r,j] * B[j]
+    rng = np.random.default_rng(0)
+    n_rows, nnz = 512, 8192
+    rows = np.sort(rng.integers(0, n_rows, nnz))
+    cols = rng.integers(0, 4096, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    y = ref.spmm_gather_ref(jnp.asarray(vals), jnp.asarray(cols), table,
+                            jnp.asarray(rows), n_rows)
+    dense_a = np.zeros((n_rows, 4096), np.float32)
+    np.add.at(dense_a, (rows, cols), vals)
+    np.testing.assert_allclose(np.asarray(y), dense_a @ np.asarray(table),
+                               rtol=2e-3, atol=2e-3)
+    print(f"SpMM gather+segsum              nnz={nnz}          (exact)")
+    print("OK: regular -> irregular streaming paths all validate")
+
+
+if __name__ == "__main__":
+    main()

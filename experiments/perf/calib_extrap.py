@@ -1,0 +1,19 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+from repro.configs import get_arch, get_shape, strategy
+from repro.launch.dryrun import _compile, _cost_triple
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1]
+cfg = get_arch(arch)
+shape = get_shape("train_4k")
+strat = strategy("ramora")
+mesh = make_production_mesh(multi_pod=False)
+prev = None
+for u in (1, 2, 3):
+    c = _compile(cfg.replace(remat=strat.remat, scan_unroll=u), shape, mesh, strat)
+    f, b, cb, _ = _cost_triple(c)
+    marg = "" if prev is None else f"  marginal: cb {cb-prev[2]:.3e} b {b-prev[1]:.3e} f {f-prev[0]:.3e}"
+    print(f"u={u}: flops {f:.3e}  bytes {b:.3e}  cbytes {cb:.3e}{marg}", flush=True)
+    prev = (f, b, cb)

@@ -1,0 +1,34 @@
+"""Dump the top collective ops (by operand bytes) of one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+from repro.configs import get_arch, get_shape, strategy
+from repro.launch.dryrun import _compile, analysis_variant
+from repro.launch.mesh import make_production_mesh
+from repro.core.roofline import _shape_bytes
+
+arch, shape_name, strat_name = sys.argv[1], sys.argv[2], sys.argv[3]
+unroll = int(sys.argv[4]) if len(sys.argv) > 4 else 1
+cfg = get_arch(arch)
+shape = get_shape(shape_name)
+strat = strategy(strat_name)
+mesh = make_production_mesh(multi_pod=False)
+compiled = _compile(cfg.replace(remat=strat.remat, scan_unroll=unroll), shape, mesh, strat)
+ops = []
+for line in compiled.as_text().splitlines():
+    ls = line.strip()
+    m = re.match(r"(?:ROOT )?%?([\w.\-]+) = (.+?) (all-reduce|all-gather|"
+                 r"reduce-scatter|all-to-all|collective-permute)"
+                 r"(-start)?\(", ls)
+    if m and "-done(" not in ls:
+        nbytes = _shape_bytes(m.group(2))
+        ops.append((nbytes, m.group(3), m.group(1), m.group(2)[:90], ls[:260]))
+ops.sort(reverse=True)
+tot = sum(o[0] for o in ops)
+print(f"total {tot:.3e} B across {len(ops)} ops")
+for nbytes, kind, name, shp, ls in ops[:14]:
+    meta = re.search(r"metadata=\{op_name=\"([^\"]{0,120})", ls)
+    print(f"  {nbytes:.3e}  {kind:18s} {shp:60s} {meta.group(1) if meta else name}")
+# also top 'while' body ops get multiplied by trip count — note which are in body
+mem = compiled.memory_analysis()
+print("peak GiB/dev:", (mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes - mem.alias_size_in_bytes)/2**30)

@@ -1,0 +1,34 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+from repro.configs import get_arch, get_shape, strategy
+from repro.launch.dryrun import _compile
+from repro.launch.mesh import make_production_mesh
+from repro.core.roofline import _shape_bytes
+
+arch, shape_name, strat_name = sys.argv[1], sys.argv[2], sys.argv[3]
+cfg = get_arch(arch)
+shape = get_shape(shape_name)
+strat = strategy(strat_name)
+mesh = make_production_mesh(multi_pod=False)
+compiled = _compile(cfg.replace(remat=strat.remat), shape, mesh, strat)
+txt = compiled.as_text()
+# find computation boundaries to attribute ops to while bodies
+cur_comp = ""
+rows = []
+for line in txt.splitlines():
+    mm = re.match(r"%?([\w.\-]+) \(", line)
+    if mm and not line.startswith(" "):
+        cur_comp = mm.group(1)
+    ls = line.strip()
+    m = re.match(r"(?:ROOT )?%?([\w.\-]+) = (.+?) (all-reduce|all-gather|"
+                 r"reduce-scatter|all-to-all|collective-permute)(-start)?\(", ls)
+    if m and "-done(" not in ls:
+        nbytes = _shape_bytes(m.group(2))
+        meta = re.search(r'op_name="([^"]*)"', ls)
+        rows.append((nbytes, m.group(3), cur_comp[:40], m.group(2)[:70],
+                     (meta.group(1) if meta else "")[-140:]))
+rows.sort(reverse=True)
+for r in rows[:18]:
+    print(f"{r[0]:.2e} {r[1]:<16} comp={r[2]:<38} {r[3]}")
+    print(f"         {r[4]}")

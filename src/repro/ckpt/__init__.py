@@ -1,0 +1,6 @@
+from repro.ckpt.checkpoint import (AsyncCheckpointer, gc_checkpoints,
+                                   latest_step, restore_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["AsyncCheckpointer", "gc_checkpoints", "latest_step",
+           "restore_checkpoint", "save_checkpoint"]

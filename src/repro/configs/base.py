@@ -1,0 +1,267 @@
+"""Config dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; shapes
+(train/prefill/decode/long-context) are ``ShapeConfig``; the distribution
+strategy (occamy/ramora/ogopogo — the paper's three generations) is a
+``StrategyConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+
+
+# --------------------------------------------------------------------------
+# Layer specs
+# --------------------------------------------------------------------------
+# mixer: "full" | "local" | "rglru" | "mamba" | "cross" (enc-dec decoder adds
+#        cross attention automatically when cfg.encoder is set)
+# mlp:   "dense" | "moe" | "none"
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "full"
+    mlp: str = "dense"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared: int = 0
+    d_expert: int = 1408          # per-expert FFN hidden size
+    d_shared: int = 0             # total shared-expert hidden (0 => n_shared*d_expert)
+    capacity_factor: float = 1.25
+    renorm_topk: bool = True      # renormalize top-k gate weights (deepseek: yes, qwen2moe: no)
+    shared_gate: bool = False     # qwen2-moe gates the shared expert output
+    router_dtype: str = "float32"
+
+    @property
+    def shared_hidden(self) -> int:
+        return self.d_shared if self.d_shared else self.n_shared * self.d_expert
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 => ceil(d_model / 16)
+    chunk: int = 256              # selective-scan chunk length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0            # 0 => d_model
+    d_conv: int = 4
+    block_width: int = 0          # 0 => d_ff of the gated branch (uses cfg.d_ff)
+    c_exponent: float = 8.0
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int = 4
+    n_frames: int = 1500          # encoder sequence length (precomputed frontend frames)
+    is_causal: bool = False
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"         # dense | hybrid | moe | ssm | audio | vlm
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    head_dim: int = 0             # 0 => d_model // n_heads
+    # layer layout: prefix (unrolled) + pattern (scanned) + remainder (unrolled)
+    prefix: tuple[LayerSpec, ...] = ()
+    pattern: tuple[LayerSpec, ...] = (LayerSpec("full", "dense"),)
+    # attention details
+    window: int = 0               # sliding window for "local" mixers
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    attn_scale: float = 0.0       # 0 => 1/sqrt(head_dim); gemma2-27b: 144
+    sandwich_norms: bool = False  # gemma2: pre+post norms around attn/mlp
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True         # rotary positions
+    learned_pos: bool = False     # whisper: learned absolute positions
+    max_position: int = 1 << 16   # learned-position table size
+    # blocks
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    encoder: EncoderConfig | None = None
+    frontend: str | None = None   # None | "audio" | "vision"
+    n_frontend_tokens: int = 0    # precomputed embedding tokens prepended (vlm)
+    # misc
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    act: str = "silu"             # silu | gelu
+    gated_mlp: bool = True
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    embed_scale: bool = False     # gemma-style sqrt(d_model) embedding scaling
+    # compute / memory policy
+    dtype: str = "bfloat16"       # activation/compute dtype
+    param_dtype: str = "float32"  # master params
+    remat: str = "block"          # none | block (remat each scanned block)
+    scan_unroll: int = 1          # block-scan unroll factor. Analysis builds
+                                  # lower u=1 and u=2 and extrapolate, since
+                                  # XLA cost_analysis counts while-bodies once.
+    attn_chunk: int = 1024        # q-chunk for the jnp flash attention
+    loss_chunk: int = 0           # 0 => full logits; >0 => chunked vocab loss
+    attention_impl: str = "xla"   # xla | pallas | pallas_interpret
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    def layer_specs(self) -> tuple[tuple[LayerSpec, ...], tuple[LayerSpec, ...], int,
+                                   tuple[LayerSpec, ...]]:
+        """Return (prefix, pattern, n_repeats, remainder) covering n_layers."""
+        n_rest = self.n_layers - len(self.prefix)
+        assert n_rest >= 0, "prefix longer than n_layers"
+        per = len(self.pattern)
+        n_rep = n_rest // per
+        rem = self.pattern[: n_rest - n_rep * per]
+        return self.prefix, self.pattern, n_rep, rem
+
+    def all_layers(self) -> list[LayerSpec]:
+        prefix, pattern, n_rep, rem = self.layer_specs()
+        return list(prefix) + list(pattern) * n_rep + list(rem)
+
+    def param_count(self) -> dict[str, float]:
+        """Analytic parameter counts (total, active, embedding)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        embed = self.vocab_size * d
+        if not self.tie_embeddings:
+            embed *= 2
+        total = 0.0
+        active = 0.0
+        for spec in self.all_layers():
+            # mixer
+            if spec.mixer in ("full", "local"):
+                p = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+                total += p
+                active += p
+            elif spec.mixer == "rglru":
+                w = self.rglru.lru_width or d
+                # two in-projections + out-projection + conv + Lambda
+                p = 3 * d * w + w * self.rglru.d_conv + w
+                p += 2 * w * (w // 8)  # block-diagonal (8 blocks) a/input gates
+                total += p
+                active += p
+            elif spec.mixer == "mamba":
+                di = self.ssm.expand * d
+                dtr = self.ssm.dt_rank or math.ceil(d / 16)
+                p = (d * 2 * di            # in_proj (x, z)
+                     + di * self.ssm.d_conv
+                     + di * (dtr + 2 * self.ssm.d_state)
+                     + dtr * di
+                     + di * self.ssm.d_state   # A_log
+                     + di                       # D
+                     + di * d)             # out_proj
+                total += p
+                active += p
+            # mlp
+            mult = 3 if self.gated_mlp else 2
+            if spec.mlp == "dense":
+                p = mult * d * self.d_ff
+                total += p
+                active += p
+            elif spec.mlp == "moe":
+                m = self.moe
+                routed = m.n_experts * mult * d * m.d_expert
+                shared = mult * d * m.shared_hidden if m.shared_hidden else 0
+                router = d * m.n_experts
+                total += routed + shared + router
+                active += m.top_k * mult * d * m.d_expert + shared + router
+            # cross attention (decoder of enc-dec)
+            if self.encoder is not None and spec.mixer in ("full", "local"):
+                p = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+                total += p
+                active += p
+        if self.encoder is not None:
+            for _ in range(self.encoder.n_layers):
+                p = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+                p += (3 if self.gated_mlp else 2) * d * self.d_ff
+                total += p
+                active += p
+        total += embed
+        active += embed
+        return {"total": float(total), "active": float(active),
+                "embedding": float(self.vocab_size * d),
+                "nonembed_total": float(total - embed),
+                "nonembed_active": float(active - embed)}
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Shapes
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                     # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1         # grad-accumulation microbatches (train only)
+
+
+# --------------------------------------------------------------------------
+# Distribution strategies — the paper's three generations
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StrategyConfig:
+    name: str = "ramora"
+    multi_pod: bool = False
+    fsdp: bool = True               # shard params over 'data' (ZeRO-3)
+    tensor_parallel: bool = True    # shard heads/d_ff/vocab over 'model'
+    expert_parallel: bool = True    # shard experts over 'model' when divisible
+    context_parallel_decode: bool = True  # shard KV length over 'data' for long decode
+    seq_shard: bool = True          # sequence-parallel residual stream (Megatron-SP)
+    hierarchical_collectives: bool = False  # ogopogo in-router analogue
+    chunked_loss: bool = False      # ogopogo: chunked vocab xent
+    grad_compression: str = "none"  # none | int8_ef
+    overlap_microbatches: int = 1   # >1: grad-accum loop to overlap comm/compute
+    remat: str = "block"
+
+    @property
+    def mesh_axes(self) -> tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+
+OCCAMY = StrategyConfig(name="occamy", fsdp=False, tensor_parallel=False,
+                        expert_parallel=False, context_parallel_decode=False,
+                        seq_shard=False)
+RAMORA = StrategyConfig(name="ramora")
+OGOPOGO = StrategyConfig(name="ogopogo", multi_pod=True,
+                         hierarchical_collectives=True, chunked_loss=True,
+                         overlap_microbatches=1)
+# Beyond-paper (perf hillclimb, EXPERIMENTS.md §Perf): for dense training the
+# per-layer TP activation psums (2 x (B,S,d) x {fwd,remat,bwd}) dwarf the
+# weight traffic whenever B_loc*S*d >> layer params; spreading the model axis
+# into the data/FSDP dimension trades them for one weight all-gather per pass.
+# MoE archs keep expert parallelism over 'model' (the paper's packed-stream
+# dispatch) — only the dense TP psums are removed.
+FSDP2D = StrategyConfig(name="fsdp2d", tensor_parallel=False, seq_shard=False,
+                        chunked_loss=True)
+FSDP2D_POD = dataclasses.replace(FSDP2D, multi_pod=True,
+                                 hierarchical_collectives=True)
+
+
+def strategy(name: str, multi_pod: bool | None = None) -> StrategyConfig:
+    base = {"occamy": OCCAMY, "ramora": RAMORA, "ogopogo": OGOPOGO,
+            "fsdp2d": FSDP2D}[name]
+    if multi_pod is not None:
+        base = dataclasses.replace(base, multi_pod=multi_pod)
+    return base

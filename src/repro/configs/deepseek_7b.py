@@ -1,0 +1,13 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# [arXiv:2401.02954; hf deepseek-ai/deepseek-llm-7b-base] llama-arch MHA
+DEEPSEEK_7B = ModelConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=102400,
+    pattern=(LayerSpec("full", "dense"),),
+)
+
+CONFIG = DEEPSEEK_7B

@@ -1,0 +1,17 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# [arXiv:2401.06066; hf deepseek-ai/deepseek-moe-16b-base]
+# layer 0 dense (d_ff 10944), layers 1..27: 2 shared + 64 routed top-6
+DEEPSEEK_MOE_16B = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=10944, vocab_size=102400,
+    prefix=(LayerSpec("full", "dense"),),
+    pattern=(LayerSpec("full", "moe"),),
+    moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, d_expert=1408,
+                  renorm_topk=True),
+)
+
+CONFIG = DEEPSEEK_MOE_16B

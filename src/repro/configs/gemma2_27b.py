@@ -1,0 +1,19 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# --------------------------------------------------------------------------
+# dense
+# --------------------------------------------------------------------------
+# [arXiv:2408.00118; hf google/gemma-2-27b]
+GEMMA2_27B = ModelConfig(
+    name="gemma2-27b", family="dense",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=36864, vocab_size=256000,
+    pattern=(LayerSpec("local", "dense"), LayerSpec("full", "dense")),
+    window=4096, attn_softcap=50.0, final_softcap=30.0,
+    act="gelu", embed_scale=True, rope_theta=10000.0,
+    attn_scale=144.0, sandwich_norms=True,
+)
+
+CONFIG = GEMMA2_27B

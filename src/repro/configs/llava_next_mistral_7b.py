@@ -1,0 +1,18 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# --------------------------------------------------------------------------
+# vlm  [hf llava-hf/llava-v1.6-mistral-7b-hf] — mistral backbone; anyres vision
+# frontend is a STUB: input_specs() provides precomputed patch embeddings.
+# --------------------------------------------------------------------------
+LLAVA_NEXT_MISTRAL_7B = ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=32000,
+    pattern=(LayerSpec("full", "dense"),),
+    frontend="vision", n_frontend_tokens=576, rope_theta=1000000.0,
+    tie_embeddings=False,
+)
+
+CONFIG = LLAVA_NEXT_MISTRAL_7B

@@ -1,0 +1,13 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# [arXiv:2404.06395; hf openbmb/MiniCPM-2B] llama-like; WSD schedule in optim/
+MINICPM_2B = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    d_ff=5760, vocab_size=122753,
+    pattern=(LayerSpec("full", "dense"),),
+)
+
+CONFIG = MINICPM_2B

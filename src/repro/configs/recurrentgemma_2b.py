@@ -1,0 +1,18 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# --------------------------------------------------------------------------
+# hybrid (Griffin / RecurrentGemma)  [arXiv:2402.19427; hf google/recurrentgemma-2b]
+# --------------------------------------------------------------------------
+RECURRENTGEMMA_2B = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000,
+    pattern=(LayerSpec("rglru", "dense"), LayerSpec("rglru", "dense"),
+             LayerSpec("local", "dense")),
+    window=2048, act="gelu", embed_scale=True,
+    rglru=RGLRUConfig(lru_width=2560, d_conv=4),
+)
+
+CONFIG = RECURRENTGEMMA_2B

@@ -1,0 +1,15 @@
+"""Assigned input shapes (identical across all 10 LM-family archs)."""
+from __future__ import annotations
+
+from repro.configs.base import ShapeConfig
+
+TRAIN_4K = ShapeConfig("train_4k", kind="train", seq_len=4096, global_batch=256)
+PREFILL_32K = ShapeConfig("prefill_32k", kind="prefill", seq_len=32768, global_batch=32)
+DECODE_32K = ShapeConfig("decode_32k", kind="decode", seq_len=32768, global_batch=128)
+LONG_500K = ShapeConfig("long_500k", kind="decode", seq_len=524288, global_batch=1)
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

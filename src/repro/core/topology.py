@@ -1,0 +1,68 @@
+"""Hardware topology model — the chiplet-system analogue for TPU pods.
+
+The paper's hierarchy (worker core → cluster → group/chiplet → multi-chiplet
+2.5D system) maps onto (MXU → TPU chip → ICI pod → multi-pod). This module
+holds the constants used by the roofline analysis and the link-level model
+used to split collective traffic into intra-pod (ICI, the "NoC/mesh") and
+inter-pod (the "D2D link") components.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    """TPU v5e-class chip (the dry-run target)."""
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12     # FLOP/s per chip
+    peak_fp32_flops: float = 98.5e12    # MXU fp32 ~ half bf16
+    hbm_bytes: float = 16 * 1024**3
+    hbm_bw: float = 819e9               # B/s
+    ici_link_bw: float = 50e9           # B/s per link (~ the paper's D2D PHY bundle)
+    ici_links_per_chip: int = 4         # 2D torus: ±x, ±y
+    vmem_bytes: float = 128 * 1024**2
+
+
+@dataclass(frozen=True)
+class PodSpec:
+    chip: ChipSpec = ChipSpec()
+    chips_x: int = 16
+    chips_y: int = 16
+    # inter-pod (DCN / "D2D") — slower than ICI, like Occamy's narrow D2D link
+    interpod_bw_per_chip: float = 12.5e9  # B/s per chip of pod-to-pod bandwidth
+
+    @property
+    def n_chips(self) -> int:
+        return self.chips_x * self.chips_y
+
+    @property
+    def peak_flops(self) -> float:
+        return self.n_chips * self.chip.peak_bf16_flops
+
+
+CHIP = ChipSpec()
+POD = PodSpec()
+
+
+def dtype_peak_flops(dtype: str) -> float:
+    """Peak FLOP/s per chip for a compute dtype (paper Fig. 4b analogue:
+    halving precision doubles throughput; fp8 feeds the MXU at 2x bf16)."""
+    return {
+        "float32": CHIP.peak_fp32_flops,
+        "bfloat16": CHIP.peak_bf16_flops,
+        "float16": CHIP.peak_bf16_flops,
+        "float8_e4m3fn": 2 * CHIP.peak_bf16_flops,
+        "float8_e5m2": 2 * CHIP.peak_bf16_flops,
+    }.get(str(dtype), CHIP.peak_bf16_flops)
+
+
+def roofline_time(flops: float, bytes_hbm: float, bytes_collective: float,
+                  n_chips: int, compute_dtype: str = "bfloat16") -> dict:
+    """The three roofline terms (seconds) from the prompt-mandated formulas."""
+    peak = dtype_peak_flops(compute_dtype)
+    return {
+        "compute_s": flops / (n_chips * peak),
+        "memory_s": bytes_hbm / (n_chips * CHIP.hbm_bw),
+        "collective_s": bytes_collective / (n_chips * CHIP.ici_link_bw),
+    }

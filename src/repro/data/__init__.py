@@ -1,0 +1,5 @@
+from repro.data.pipeline import (MarkovSpec, MixtureDataset, Prefetcher,
+                                 SyntheticLM, device_put_batch)
+
+__all__ = ["MarkovSpec", "MixtureDataset", "Prefetcher", "SyntheticLM",
+           "device_put_batch"]

@@ -1,0 +1,117 @@
+"""FlashAttention-2 Pallas TPU kernel (paper §II-C uses FlashAttention-2).
+
+Layout: q (BH, Sq, D), k/v (BK, Skv, D) with BH = BK·G (GQA: the k/v block
+index_map divides the head index, so kv tiles are shared across the G query
+heads of a group — no repeated kv in HBM).
+
+Grid: (BH, Sq/bq, Skv/bk), kv innermost (sequential): running (m, l, acc)
+live in VMEM scratch across the kv pass — the paper's "keep the working set
+in SPM, stream the tiles" (C1) applied to attention. Causal/window masking is
+applied per-tile; fully-masked tiles are skipped with ``pl.when`` (the
+sliding-window compute saving of gemma2/recurrentgemma local layers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               n_kv: int, bq: int, bk: int, scale: float, cap: float,
+               causal: bool, window: int, kv_len: int, out_dtype):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    q_start = i * bq
+    k_start = j * bk
+    # tile-level skip: fully-masked kv tiles do no work (C1/C5 data-movement
+    # frugality; gives local attention its sub-quadratic compute)
+    live = jnp.bool_(True)
+    if causal:
+        live &= q_start + bq - 1 >= k_start
+    if window:
+        live &= q_start < k_start + bk + window - 1
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0]                                 # (bq, D)
+        k = k_ref[0]                                 # (bk, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len  # padded KV rows masked out
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)[:, None]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-37)).astype(out_dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, scale: float | None = None,
+                    kv_len: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (BH, Sq, D); k, v: (BK, Skv, D) with BH % BK == 0 (GQA groups).
+    ``kv_len``: true (unpadded) KV length; 0 means Skv."""
+    BH, Sq, D = q.shape
+    BK, Skv, _ = k.shape
+    assert BH % BK == 0
+    G = BH // BK
+    scale = (1.0 / (D ** 0.5)) if scale is None else scale
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "pad in ops.py first"
+    n_kv = Skv // bk
+    grid = (BH, Sq // bq, n_kv)
+    kernel = functools.partial(
+        _fa_kernel, n_kv=n_kv, bq=bq, bk=bk, scale=scale, cap=cap,
+        causal=causal, window=window, kv_len=(kv_len or Skv),
+        out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=G: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=G: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

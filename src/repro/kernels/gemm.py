@@ -1,0 +1,109 @@
+"""Streaming tiled GEMM with fused in-stream epilogue (Pallas TPU).
+
+The Occamy cluster recipe (paper C1): double-buffered HBM→SPM tiles feeding a
+dense compute unit — here, ``BlockSpec``-pipelined HBM→VMEM tiles feeding the
+MXU, with the K-loop accumulating in a VMEM fp32 scratch (the paper's
+expanding/widening accumulation, C2). The epilogue (scale/bias/activation) is
+applied while the tile is still in VMEM — Ogopogo's in-stream DMA ops (C5b):
+no second pass over HBM for the elementwise work.
+
+Grid: (M/bm, N/bn, K/bk) with K innermost (sequential on TPU), so the output
+tile stays resident while input tiles stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, scale: float,
+                 act: str | None, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if scale != 1.0:
+            out = out * scale
+        if act == "gelu":
+            out = jax.nn.gelu(out, approximate=True)
+        elif act == "silu":
+            out = jax.nn.silu(out)
+        o_ref[...] = out.astype(out_dtype)
+
+
+def _gemm_bias_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                      scale: float, act: str | None, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...] * scale + b_ref[...].astype(jnp.float32)
+        if act == "gelu":
+            out = jax.nn.gelu(out, approximate=True)
+        elif act == "silu":
+            out = jax.nn.silu(out)
+        o_ref[...] = out.astype(out_dtype)
+
+
+def gemm(x, w, *, bias=None, scale: float = 1.0, act: str | None = None,
+         block_m: int = 128, block_n: int = 128, block_k: int = 128,
+         out_dtype=jnp.float32, interpret: bool = False):
+    """x: (M, K) @ w: (K, N) -> (M, N) with fused epilogue.
+
+    Blocks are MXU-aligned (multiples of 128); non-divisible edges fall back
+    to smaller aligned blocks chosen by the wrapper (ops.py pads instead).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "pad in ops.py first", (M, K, N), (block_m, block_k, block_n))
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+
+    if bias is None:
+        kernel = functools.partial(_gemm_kernel, n_k=n_k, scale=scale, act=act,
+                                   out_dtype=out_dtype)
+        in_specs = [
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ]
+        args = (x, w)
+    else:
+        kernel = functools.partial(_gemm_bias_kernel, n_k=n_k, scale=scale,
+                                   act=act, out_dtype=out_dtype)
+        in_specs = [
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ]
+        args = (x, w, bias.reshape(1, N))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(*args)

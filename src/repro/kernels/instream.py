@@ -1,0 +1,56 @@
+"""In-stream DMA operations (paper C5b) as a Pallas TPU kernel.
+
+Ogopogo extends the cluster DMA engines with in-stream vector units that
+scale/shift elements and compute arithmetic reductions *while the data is in
+flight*. TPU analogue: a streaming copy kernel whose grid pipelines HBM→VMEM
+tiles; the elementwise op is applied in VMEM during the copy and a running
+reduction accumulates in scratch — one pass over HBM instead of
+(copy, scale, reduce) = three.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _instream_kernel(x_ref, y_ref, sum_ref, acc_ref, *, n: int, scale: float,
+                     shift: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    y = x_ref[...].astype(jnp.float32) * scale + shift
+    y_ref[...] = y
+    acc_ref[...] += jnp.sum(y, axis=0, keepdims=True)
+
+    @pl.when(i == n - 1)
+    def _finish():
+        sum_ref[...] = jnp.sum(acc_ref[...], axis=-1, keepdims=True)
+
+
+def instream_scale_reduce(x, *, scale: float = 1.0, shift: float = 0.0,
+                          block: int = 1024, interpret: bool = False):
+    """x: (M, D). Returns (scale*x + shift, global sum) in one stream pass."""
+    M, D = x.shape
+    bm = min(block, M)
+    assert M % bm == 0, "pad in ops.py first"
+    n = M // bm
+    kernel = functools.partial(_instream_kernel, n=n, scale=scale, shift=shift)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, D), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return y, s[0, 0]

@@ -1,0 +1,57 @@
+"""Diagonal linear recurrence kernel: h_t = a_t ⊙ h_{t-1} + b_t.
+
+Serves RG-LRU (RecurrentGemma) and the Mamba-1 selective scan (flattened
+(d_inner, d_state) channels). TPU adaptation of the paper's C1 recipe for a
+recurrence: the time loop runs *inside* the kernel over a VMEM-resident chunk
+(sequential in t, vectorized across the lane dimension D), while the grid
+streams (batch × channel-tile × chunk) blocks HBM→VMEM; the carry ``h`` lives
+in a VMEM scratch across the chunk dimension. A GPU implementation would use
+a warp-parallel associative scan; on TPU the VPU prefers a dense sequential
+loop over lanes — this is the hardware adaptation, not a port.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(a_ref, b_ref, o_ref, h_ref, *, chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        at = a_ref[0, t, :]
+        bt = b_ref[0, t, :]
+        h = at * h + bt
+        o_ref[0, t, :] = h
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def lru_scan(a, b, *, block_d: int = 512, chunk: int = 256,
+             interpret: bool = False):
+    """a, b: (B, L, D) fp32 -> h: (B, L, D) fp32 (zero initial state)."""
+    B, L, D = a.shape
+    bd = min(block_d, D)
+    ck = min(chunk, L)
+    assert D % bd == 0 and L % ck == 0, "pad in ops.py first"
+    grid = (B, D // bd, L // ck)
+    kernel = functools.partial(_lru_kernel, chunk=ck)
+    spec = pl.BlockSpec((1, ck, bd), lambda i, j, c: (i, c, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, L, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,139 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op pads its inputs to kernel-aligned shapes, dispatches to the Pallas
+kernel (``impl='pallas'`` on TPU, ``impl='interpret'`` for CPU validation) or
+the pure-jnp oracle (``impl='ref'``), and unpads. The model layers call these
+through ``cfg.attention_impl``-style switches.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.gemm import gemm as _gemm
+from repro.kernels.instream import instream_scale_reduce as _instream
+from repro.kernels.lru_scan import lru_scan as _lru
+from repro.kernels.packed_gather import gather_rows as _gather
+from repro.kernels.packed_gather import packed_gather_rows as _packed_gather
+
+
+def _pad_to(x, mults, axes):
+    pads = [(0, 0)] * x.ndim
+    padded = False
+    for ax, m in zip(axes, mults):
+        r = (-x.shape[ax]) % m
+        if r:
+            pads[ax] = (0, r)
+            padded = True
+    return (jnp.pad(x, pads), True) if padded else (x, False)
+
+
+@partial(jax.jit, static_argnames=("scale", "act", "impl", "block_m",
+                                   "block_n", "block_k"))
+def gemm(x, w, bias=None, *, scale: float = 1.0, act: str | None = None,
+         impl: str = "interpret", block_m: int = 128, block_n: int = 128,
+         block_k: int = 128):
+    if impl == "ref":
+        return _ref.gemm_ref(x, w, bias=bias, scale=scale, act=act)
+    M, K = x.shape
+    N = w.shape[1]
+    xp, _ = _pad_to(x, (block_m, block_k), (0, 1))
+    wp, _ = _pad_to(w, (block_k, block_n), (0, 1))
+    bp = None
+    if bias is not None:
+        bp, _ = _pad_to(bias, (block_n,), (0,))
+    out = _gemm(xp, wp, bias=bp, scale=scale, act=act, block_m=block_m,
+                block_n=block_n, block_k=block_k,
+                interpret=(impl == "interpret"))
+    return out[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "scale", "impl",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, scale: float | None = None,
+                    impl: str = "interpret", block_q: int = 128,
+                    block_k: int = 128):
+    """q: (BH, Sq, D); k, v: (BK, Skv, D), BH % BK == 0."""
+    if impl == "ref":
+        G = q.shape[0] // k.shape[0]
+        kr = jnp.repeat(k, G, 0) if G > 1 else k
+        vr = jnp.repeat(v, G, 0) if G > 1 else v
+        return _ref.flash_attention_ref(q, kr, vr, causal=causal,
+                                        window=window, cap=cap, scale=scale)
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    qp, _ = _pad_to(q, (bq,), (1,))
+    kp, _ = _pad_to(k, (bk,), (1,))
+    vp, _ = _pad_to(v, (bk,), (1,))
+    out = _fa(qp, kp, vp, causal=causal, window=window, cap=cap, scale=scale,
+              kv_len=Skv, block_q=bq, block_k=bk,
+              interpret=(impl == "interpret"))
+    return out[:, :Sq]
+
+
+@partial(jax.jit, static_argnames=("impl", "block_d", "chunk"))
+def lru_scan(a, b, *, impl: str = "interpret", block_d: int = 512,
+             chunk: int = 256):
+    if impl == "ref":
+        return _ref.lru_scan_ref(a, b)
+    B, L, D = a.shape
+    bd = min(block_d, D)
+    ck = min(chunk, L)
+    # pad time with identity (a=1, b=0), channels with zeros
+    ap, _ = _pad_to(a, (ck,), (1,))
+    if ap.shape[1] != L:
+        ap = ap.at[:, L:, :].set(1.0)
+    bp, _ = _pad_to(b, (ck,), (1,))
+    ap, _ = _pad_to(ap, (bd,), (2,))
+    bp, _ = _pad_to(bp, (bd,), (2,))
+    out = _lru(ap, bp, block_d=bd, chunk=ck, interpret=(impl == "interpret"))
+    return out[:, :L, :D]
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def gather_rows(table, idx, *, impl: str = "interpret"):
+    if impl == "ref":
+        return _ref.gather_rows_ref(table, idx)
+    return _gather(table, idx, interpret=(impl == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("impl", "pack", "sort"))
+def packed_gather_rows(table, idx, *, impl: str = "interpret", pack: int = 8,
+                       sort: bool = True):
+    """Packed/coalesced indexed stream. With ``sort`` (the temporal
+    coalescer), gathers are issued in index order and unpermuted after."""
+    if impl == "ref":
+        return _ref.gather_rows_ref(table, idx)
+    M = idx.shape[0]
+    r = (-M) % pack
+    order = jnp.argsort(idx) if sort else jnp.arange(M)
+    sidx = idx[order]
+    if r:
+        sidx = jnp.concatenate([sidx, jnp.full((r,), sidx[-1], sidx.dtype)])
+    out = _packed_gather(table, sidx, pack=pack, window=table.shape[0],
+                         interpret=(impl == "interpret"))[:M]
+    inv = jnp.argsort(order) if sort else order
+    return out[inv]
+
+
+@partial(jax.jit, static_argnames=("scale", "shift", "impl", "block"))
+def instream_scale_reduce(x, *, scale: float = 1.0, shift: float = 0.0,
+                          impl: str = "interpret", block: int = 1024):
+    if impl == "ref":
+        return _ref.instream_scale_reduce_ref(x, scale=scale, shift=shift)
+    M, D = x.shape
+    bm = min(block, M)
+    xp, padded = _pad_to(x, (bm,), (0,))
+    y, s = _instream(xp, scale=scale, shift=shift, block=bm,
+                     interpret=(impl == "interpret"))
+    if padded:
+        y = y[:M]
+        s = s - shift * (xp.shape[0] - M) * D
+    return y, s

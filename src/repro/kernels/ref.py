@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x, w, *, bias=None, scale=1.0, act=None):
+    """Streaming GEMM with fused in-stream epilogue (paper C5b)."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if scale != 1.0:
+        out = out * scale
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    elif act == "silu":
+        out = jax.nn.silu(out)
+    return out
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, scale=None):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D). Plain softmax attention."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = (1.0 / jnp.sqrt(D)) if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+def lru_scan_ref(a, b, h0=None):
+    """Diagonal recurrence h_t = a_t*h_{t-1} + b_t. a, b: (B, L, D)."""
+    B, L, D = a.shape
+    h0 = jnp.zeros((B, D), jnp.float32) if h0 is None else h0
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.astype(jnp.float32).transpose(1, 0, 2),
+                          b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def gather_rows_ref(table, idx):
+    """Indexed row stream (paper C2/C5c): out[i] = table[idx[i]]."""
+    return table[idx]
+
+
+def instream_scale_reduce_ref(x, *, scale=1.0, shift=0.0):
+    """In-stream DMA ops (paper C5b): y = scale*x + shift computed 'during the
+    transfer', plus an in-stream arithmetic reduction (global sum)."""
+    y = x.astype(jnp.float32) * scale + shift
+    return y, jnp.sum(y)
+
+
+def spmm_gather_ref(values, col_idx, dense, seg_ids, n_rows):
+    """SpMM via gather + segment-sum (COO rows sorted): out[r] = Σ v·B[col]."""
+    gathered = dense[col_idx] * values[:, None].astype(dense.dtype)
+    return jax.ops.segment_sum(gathered, seg_ids, num_segments=n_rows)

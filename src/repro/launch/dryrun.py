@@ -1,0 +1,347 @@
+import os
+import tempfile
+
+# Pre-normalization HLO dumps: XLA:CPU's float-normalization pass legalizes
+# bf16 collectives/ops to f32 (CPU has no bf16 reducers), inflating byte
+# counts 2x vs the TPU target. We therefore parse collective bytes from the
+# after_spmd-partitioning snapshot (true wire dtypes) rather than the
+# post-optimization module. Verified: a bf16 psum shows as
+# `f32 all-reduce(..) to_apply=%add.clone_promoted` post-opt but stays bf16
+# in the after_spmd-partitioning dump.
+_DUMP_DIR = tempfile.mkdtemp(prefix="repro_hlo_dump_")
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    f"--xla_dump_to={_DUMP_DIR} "
+    "--xla_dump_hlo_pass_re=spmd-partitioning "
+    "--xla_dump_hlo_module_re=.*(train_step|prefill_step|serve_step).*")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes (16×16 single-pod, 2×16×16 multi-pod) and extract the
+memory / cost / collective roofline inputs. All inputs are ShapeDtypeStructs —
+nothing is allocated.
+
+Methodology note (two-point extrapolation): XLA's ``cost_analysis()`` counts a
+``while`` body ONCE, not ×trip-count, so a scanned layer stack under-reports
+FLOPs/bytes/collectives. For the roofline we therefore lower two *analysis*
+builds with block-scan unroll u=1 and u=2 (inner attention/SSM/loss loops
+disabled so the layer scan is the only while loop) and extrapolate:
+
+    total = m(u1) + (n_rep - 1) · (m(u2) - m(u1))
+
+The *production* build (scanned, chunked, remat) supplies memory_analysis().
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, get_shape, is_skipped, strategy
+from repro.configs.registry import ARCHS
+from repro.core.roofline import analyze_costs, parse_collectives
+from repro.core.sharding import Partitioner
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models.cache import init_cache
+from repro.optim.optimizers import adamw
+from repro.train.train_step import (batch_template, make_prefill_step,
+                                    make_serve_step, make_train_step,
+                                    serve_params_template,
+                                    train_state_template)
+
+
+def analysis_variant(cfg, shape, unroll: int):
+    """Analysis build: only the layer-stack scan remains a while loop."""
+    kw = dict(scan_unroll=unroll, attn_chunk=shape.seq_len, loss_chunk=0)
+    if cfg.ssm is not None:
+        import dataclasses
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk=shape.seq_len)
+    if cfg.rglru is not None:
+        import dataclasses
+        kw["rglru"] = dataclasses.replace(cfg.rglru, chunk=shape.seq_len)
+    return cfg.replace(**kw)
+
+
+def input_specs(cfg, shape, mesh, strat):
+    """ShapeDtypeStruct stand-ins + shardings for every model input of the
+    (cfg, shape) cell. Returns (step_fn, args, in_shardings, out_shardings,
+    donate). Output shardings mirror inputs so donated buffers alias."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mode = {"decode": "decode", "prefill": "prefill"}.get(shape.kind, "train")
+    part = Partitioner(mesh, strat, cfg, shape, mode=mode)
+    if shape.kind == "train":
+        opt = adamw(1e-3)
+        step = make_train_step(cfg, opt, strat, part)
+        state = train_state_template(cfg, opt)
+        batch = batch_template(cfg, shape)
+        state_sh = {"params": part.params_sharding(state["params"]),
+                    "opt": {k: part.params_sharding(v)
+                            for k, v in state["opt"].items()},
+                    "step": part.scalar_sharding()}
+        in_sh = (state_sh, part.batch_sharding(batch))
+        out_sh = (state_sh, {"loss": part.scalar_sharding(),
+                             "grad_norm": part.scalar_sharding()})
+        return step, (state, batch), in_sh, out_sh, (0,)
+    if shape.kind == "prefill":
+        params = serve_params_template(cfg)
+        batch = batch_template(cfg, shape)
+        cache = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch,
+                                                  shape.seq_len))
+        step = make_prefill_step(cfg, part)
+        cache_sh = part.cache_sharding(cache)
+        in_sh = (part.params_sharding(params), part.batch_sharding(batch),
+                 cache_sh)
+        logits_sh = part.named(("batch", "vocab"),
+                               (shape.global_batch, cfg.vocab_size))
+        out_sh = (logits_sh, cache_sh)
+        return step, (params, batch, cache), in_sh, out_sh, (2,)
+    # decode
+    params = serve_params_template(cfg)
+    cache = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch,
+                                              shape.seq_len))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = make_serve_step(cfg, part)
+    cache_sh = part.cache_sharding(cache)
+    in_sh = (part.params_sharding(params), cache_sh,
+             part.batch_sharding({"t": tokens})["t"], part.scalar_sharding())
+    logits_sh = part.named(("batch", None, "vocab"),
+                           (shape.global_batch, 1, cfg.vocab_size))
+    out_sh = (logits_sh, cache_sh)
+    return step, (params, cache, tokens, pos), in_sh, out_sh, (1,)
+
+
+def _clear_dump():
+    for f in Path(_DUMP_DIR).glob("*"):
+        try:
+            f.unlink()
+        except OSError:
+            pass
+
+
+def _read_spmd_dump() -> str | None:
+    """The after_spmd-partitioning snapshot of the step module (true wire
+    dtypes, before CPU float-normalization promotes bf16 to f32)."""
+    cands = sorted(Path(_DUMP_DIR).glob("*after_spmd-partitioning*.txt"),
+                   key=lambda p: p.stat().st_mtime)
+    if not cands:
+        return None
+    return cands[-1].read_text()
+
+
+def _compile(cfg, shape, mesh, strat):
+    step, args, in_sh, out_sh, donate = input_specs(cfg, shape, mesh, strat)
+    _clear_dump()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        return lowered.compile()
+
+
+def _cost_triple(compiled):
+    ca = compiled.cost_analysis()
+    dump = _read_spmd_dump()
+    if dump is not None:
+        coll = parse_collectives(dump)
+        coll["source"] = "after_spmd_partitioning(true-dtype)"
+    else:  # fallback: post-opt module (bf16 collectives promoted to f32)
+        coll = parse_collectives(compiled.as_text())
+        coll["source"] = "post_optimization(f32-promoted)"
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]), coll)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             strategy_name: str = "ramora", verbose: bool = True,
+             analysis: bool = True) -> dict:
+    reason = is_skipped(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    strat = strategy(strategy_name, multi_pod=multi_pod)
+    n_chips = mesh_chips(mesh)
+
+    # 1) production build — the deployable artifact; memory truth
+    compiled = _compile(cfg.replace(remat=strat.remat), shape, mesh, strat)
+    mem = compiled.memory_analysis()
+    t_prod = time.time() - t0
+
+    result: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": strategy_name, "status": "ok", "n_chips": n_chips,
+        "prod_compile_s": round(t_prod, 1),
+        "memory": {
+            "argument_gib_per_dev": mem.argument_size_in_bytes / 2**30,
+            "output_gib_per_dev": mem.output_size_in_bytes / 2**30,
+            "temp_gib_per_dev": mem.temp_size_in_bytes / 2**30,
+            "alias_gib_per_dev": mem.alias_size_in_bytes / 2**30,
+            "peak_gib_per_dev": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes) / 2**30,
+            "fits_16gib": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes) < 16 * 2**30,
+        },
+    }
+    if shape.kind == "decode":
+        # XLA:CPU buffer assignment keeps xs/ys + update copies of the donated
+        # KV cache (~2 extra copies); XLA:TPU updates donated caches in place
+        # (the standard JAX serving pattern). Report the analytic sharded
+        # cache size and the TPU-adjusted peak alongside the raw numbers.
+        part = Partitioner(mesh, strat, cfg, shape, mode="decode")
+        cache_t = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch,
+                                                    shape.seq_len))
+        sh = part.cache_sharding(cache_t)
+        per_dev = 0
+        for leaf, s in zip(jax.tree.leaves(cache_t), jax.tree.leaves(
+                sh, is_leaf=lambda x: hasattr(x, "spec"))):
+            shard_elems = 1
+            for dim, ax in zip(leaf.shape, tuple(s.spec) + (None,) * leaf.ndim):
+                n = 1
+                if ax is not None:
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    for a in axes:
+                        n *= mesh.shape[a]
+                shard_elems *= -(-dim // n)
+            per_dev += shard_elems * leaf.dtype.itemsize
+        peak = result["memory"]["peak_gib_per_dev"]
+        adj = peak - 2 * per_dev / 2**30
+        result["memory"]["kv_cache_gib_per_dev"] = per_dev / 2**30
+        result["memory"]["peak_tpu_adjusted_gib_per_dev"] = adj
+        result["memory"]["fits_16gib_tpu_adjusted"] = adj < 16.0
+
+    # 2) roofline terms (single-pod only):
+    #    FLOPs   <- analysis pair (inner loops disabled; chunk-independent)
+    #    bytes & collectives <- production pair (flash-ideal HBM traffic and
+    #    the deployable collective schedule)
+    #    each extrapolated: total = m(u1) + (n_rep-1)·(m(u2)-m(u1))
+    if analysis:
+        _, _, n_rep, _ = cfg.layer_specs()
+
+        # lax.scan(unroll=u) with length n lowers to a while body holding u
+        # periods PLUS (n mod u) inline remainder periods. cost_analysis
+        # counts the body once, so m(u) = fixed + P*(u + n mod u):
+        #   u=1 -> fixed + P;  u=2 -> fixed + (2 + n%2)*P.
+        # (calibrated: experiments/perf/calib_extrap.py shows m3-m2 == m2-m1
+        # for odd n — both marginals are 2P, not P.)
+        k2 = 2 + (n_rep % 2)
+
+        def extrap(m1, m2):
+            p = max(m2 - m1, 0.0) / (k2 - 1)
+            return (m1 - p) + n_rep * p
+
+        pf1, pb1, pcb1, coll1 = _cost_triple(compiled)
+        a1 = _compile(analysis_variant(cfg, shape, 1), shape, mesh, strat)
+        af1, _, _, _ = _cost_triple(a1)
+        if n_rep > 1:
+            prod2 = _compile(cfg.replace(remat=strat.remat, scan_unroll=2),
+                             shape, mesh, strat)
+            pf2, pb2, pcb2, _ = _cost_triple(prod2)
+            a2 = _compile(analysis_variant(cfg, shape, 2), shape, mesh, strat)
+            af2, _, _, _ = _cost_triple(a2)
+            flops = extrap(af1, af2)
+            nbytes = extrap(pb1, pb2)
+            cbytes = extrap(pcb1, pcb2)
+        else:
+            flops, nbytes, cbytes = af1, pb1, pcb1
+        # cost_analysis flops/bytes are per-partition on SPMD builds
+        from repro.core.memfloor import (MeshSizes, hbm_bytes_floor,
+                                         hbm_peak_floor)
+        msz = (MeshSizes(mesh.shape["data"], mesh.shape["model"],
+                         mesh.shape.get("pod", 1)))
+        mode = {"decode": "decode", "prefill": "prefill"}.get(shape.kind,
+                                                              "train")
+        part = Partitioner(mesh, strat, cfg, shape, mode=mode)
+        dp = part.logical_size("batch")
+        tp = part.logical_size("tp")
+        floor = hbm_bytes_floor(cfg, shape, msz, fsdp=strat.fsdp, dp=dp, tp=tp)
+        result["memory_floor_components_gib"] = {
+            k: v / 2**30 for k, v in floor.items()}
+        result["parallel_degrees"] = {"dp": dp, "tp": tp}
+        lc = cfg.loss_chunk or (512 if strat.chunked_loss else 0)
+        peak_fl = hbm_peak_floor(cfg, shape, msz, fsdp=strat.fsdp,
+                                 loss_chunk=lc, seq_shard=strat.seq_shard,
+                                 dp=dp, tp=tp)
+        result["memory"]["peak_floor_tpu_gib_per_dev"] = peak_fl["total"] / 2**30
+        result["memory"]["peak_floor_components_gib"] = {
+            k: round(v / 2**30, 3) for k, v in peak_fl.items()}
+        result["memory"]["fits_16gib_floor"] = peak_fl["total"] < 16 * 2**30
+        result.update(analyze_costs(
+            flops_per_dev=flops, bytes_per_dev=nbytes,
+            collective_bytes_per_dev=cbytes, collectives=coll1,
+            arch=arch, shape=shape_name, n_chips=n_chips,
+            memory_floor_bytes_per_dev=floor["total"]))
+        result["analysis_compile_s"] = round(time.time() - t0 - t_prod, 1)
+
+    if verbose:
+        m = result["memory"]
+        line = (f"[{result['mesh']}|{strategy_name}] {arch} × {shape_name}: "
+                f"peak {m['peak_gib_per_dev']:.2f} GiB/dev")
+        if analysis:
+            r = result["roofline"]
+            line += (f" | compute {r['compute_s']:.2e}s memory {r['memory_s']:.2e}s"
+                     f" collective {r['collective_s']:.2e}s -> {r['bottleneck']}"
+                     f" | frac {r['roofline_fraction']:.2f}"
+                     f" useful {r['useful_flops_ratio']:.2f}")
+        print(line + f" ({round(time.time() - t0)}s)", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--strategy", default="ramora",
+                    choices=["occamy", "ramora", "ogopogo", "fsdp2d"])
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="production compile only (multi-pod shard proof)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = ([(args.arch, args.shape)] if not args.all else
+             [(a, s) for a in ARCHS for s in SHAPES])
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            # roofline analysis is single-pod only (per spec); multi-pod pass
+            # proves the 'pod' axis shards.
+            analysis = (not mp) and (not args.no_analysis)
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}__{args.strategy}"
+            fp = outdir / f"{tag}.json"
+            try:
+                res = run_cell(arch, shape, multi_pod=mp,
+                               strategy_name=args.strategy, analysis=analysis)
+            except Exception as e:  # a failure here is a bug in the system
+                failures += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "strategy": args.strategy, "status": "FAILED",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"FAILED {tag}: {type(e).__name__}: {e}", flush=True)
+            fp.write_text(json.dumps(res, indent=1))
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

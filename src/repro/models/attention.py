@@ -1,0 +1,319 @@
+"""Attention: GQA with RoPE, sliding windows, logit softcaps, qk-norm.
+
+Training/prefill uses a chunked FlashAttention-2-style online-softmax scan in
+pure jnp (``flash_attention_xla``) — this is both the production XLA path for
+the CPU dry-run and the numerical oracle for the Pallas kernel
+(kernels/flash_attention.py). The paper itself leverages FlashAttention-2 for
+its GPT-J inference evaluation (§II-C), so this layer is paper-faithful.
+
+Decode uses a single-query scoring path against a (possibly length-sharded)
+KV cache — the context-parallel cache is the framework's analogue of spreading
+Occamy's HBM channels across Ramora's mesh edge routers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_norm, dense_init, norm_init, rope, softcap
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def attention_init(rng, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "q_proj": {"kernel": dense_init(ks[0], d, cfg.n_heads * hd, dtype)},
+        "k_proj": {"kernel": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype)},
+        "v_proj": {"kernel": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype)},
+        "o_proj": {"kernel": dense_init(ks[3], cfg.n_heads * hd, d, dtype)},
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, "rmsnorm", dtype)
+        p["k_norm"] = norm_init(hd, "rmsnorm", dtype)
+    return p
+
+
+def _scale(cfg: ModelConfig) -> float:
+    s = cfg.attn_scale if cfg.attn_scale else cfg.resolved_head_dim
+    return 1.0 / math.sqrt(s)
+
+
+# --------------------------------------------------------------------------
+# core chunked flash (online softmax) — jnp
+# --------------------------------------------------------------------------
+def flash_attention_xla(q, k, v, *, causal: bool, window: int, cap: float,
+                        scale: float, q_chunk: int, kv_chunk: int,
+                        q_offset=0, kv_lens=None, qc_constraint=None):
+    """q: (B, Sq, K, G, D); k, v: (B, Skv, K, D). Returns (B, Sq, K, G, D).
+
+    Online-softmax two-level scan (FlashAttention-2 schedule): outer over query
+    chunks, inner over KV chunks with running (max, sum, acc) carried in fp32.
+    ``window > 0`` masks to a sliding window; ``kv_lens`` (B,) masks ragged KV.
+    ``q_offset`` is the absolute position of q[0] (decode/chunked prefill).
+    """
+    B, Sq, K, G, D = q.shape
+    Skv = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    n_q = -(-Sq // q_chunk)
+    n_kv = -(-Skv // kv_chunk)
+    pad_q = n_q * q_chunk - Sq
+    pad_kv = n_kv * kv_chunk - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kv_valid = Skv if kv_lens is None else kv_lens  # scalar or (B,)
+
+    qs = q.reshape(B, n_q, q_chunk, K, G, D).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(B, n_kv, kv_chunk, K, D).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, n_kv, kv_chunk, K, D).transpose(1, 0, 3, 2, 4)
+
+    def q_body(_, qi_qc):
+        qi, qc = qi_qc  # qc: (B, K, G, q_chunk, D)
+        if qc_constraint is not None:
+            qc = qc_constraint(qc)  # context-parallel: shard the q-chunk dim
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc  # (B, K, kv_chunk, D)
+            kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+            valid = kv_pos < (kv_valid if jnp.ndim(kv_valid) == 0
+                              else kv_valid[:, None, None, None, None])
+            if jnp.ndim(kv_valid) == 0:
+                mask &= valid[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            else:
+                s = jnp.where(mask[None, None, None] & valid, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
+        # checkpoint: recompute s/p per KV chunk in backward instead of saving
+        # the (q_chunk, kv_chunk) probability tiles — the FlashAttention trade.
+        body = (jax.checkpoint(kv_body, prevent_cse=False)
+                if n_kv > 1 else kv_body)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(n_kv), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(n_q), qs))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, n_q * q_chunk, K, G, D)
+    return out[:, :Sq]
+
+
+# --------------------------------------------------------------------------
+# layer-level apply (projections + rope + attention)
+# --------------------------------------------------------------------------
+def _project_qkv(p: Params, cfg: ModelConfig, x, xkv, positions_q, positions_kv,
+                 compute_dtype):
+    B, Sq, _ = x.shape
+    Skv = xkv.shape[1]
+    hd, H, K = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    xc = x.astype(compute_dtype)
+    xkvc = xkv.astype(compute_dtype)
+    q = (xc @ p["q_proj"]["kernel"].astype(compute_dtype)).reshape(B, Sq, K, G, hd)
+    k = (xkvc @ p["k_proj"]["kernel"].astype(compute_dtype)).reshape(B, Skv, K, hd)
+    v = (xkvc @ p["v_proj"]["kernel"].astype(compute_dtype)).reshape(B, Skv, K, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    if cfg.use_rope and positions_q is not None:
+        qf = q.reshape(B, Sq, K * G, hd)
+        qf = rope(qf, positions_q, cfg.rope_theta)
+        q = qf.reshape(B, Sq, K, G, hd)
+        k = rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(p: Params, cfg: ModelConfig, x, *, is_local: bool,
+                      positions, compute_dtype, causal: bool = True,
+                      xkv=None, positions_kv=None, part=None):
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    Returns (out, (k, v)) — k/v are RoPE-applied and cacheable.
+    """
+    xkv = x if xkv is None else xkv
+    positions_kv = positions if positions_kv is None else positions_kv
+    q, k, v = _project_qkv(p, cfg, x, xkv, positions, positions_kv, compute_dtype)
+    k_cache, v_cache = k, v  # un-repeated, for the decode cache
+    n_heads_eff = cfg.n_heads
+    if part is not None:
+        # GQA tensor-parallel layout selection:
+        #  1. kv-heads divisible by 'model'  -> shard kv heads (grouped layout)
+        #  2. q-heads divisible              -> repeat-KV to H heads, shard those
+        #  3. otherwise -> repeat-KV, zero-pad heads up to the axis, shard
+        #     (padded heads are sliced off before o_proj: exact)
+        n_model = part.logical_size("heads")
+        B_, Sq, K, G, D = q.shape
+        if n_model > 1 and K % n_model == 0:
+            q = part.act(q, ("batch", None, "heads", None, None))
+            k = part.act(k, ("batch", None, "heads", None))
+            v = part.act(v, ("batch", None, "heads", None))
+        elif n_model > 1:
+            H = K * G
+            h_pad = (-(-H // n_model) * n_model) - H
+            q = q.reshape(B_, Sq, H, 1, D)
+            if G > 1:
+                k = jnp.repeat(k, G, axis=2)
+                v = jnp.repeat(v, G, axis=2)
+            if h_pad:
+                zq = ((0, 0), (0, 0), (0, h_pad), (0, 0), (0, 0))
+                zk = ((0, 0), (0, 0), (0, h_pad), (0, 0))
+                q = jnp.pad(q, zq)
+                k = jnp.pad(k, zk)
+                v = jnp.pad(v, zk)
+                n_heads_eff = H + h_pad
+            q = part.act(q, ("batch", None, "heads", None, None))
+            k = part.act(k, ("batch", None, "heads", None))
+            v = part.act(v, ("batch", None, "heads", None))
+    window = cfg.window if is_local else 0
+    if part is None and cfg.attention_impl in ("pallas", "pallas_interpret"):
+        # the Pallas TPU kernel (kernels/flash_attention.py) — local path;
+        # the SPMD path uses the numerically-identical XLA flash (tested
+        # equal), since a pallas_call inside pjit would need shard_map
+        from repro.kernels.ops import flash_attention as _pl_fa
+        B_, Sq_, K_, G_, D_ = q.shape
+        Skv_ = k.shape[1]
+        qf = q.transpose(0, 2, 3, 1, 4).reshape(B_ * K_ * G_, Sq_, D_)
+        kf = k.transpose(0, 2, 1, 3).reshape(B_ * K_, Skv_, D_)
+        vf = v.transpose(0, 2, 1, 3).reshape(B_ * K_, Skv_, D_)
+        of = _pl_fa(qf, kf, vf, causal=causal, window=window,
+                    cap=cfg.attn_softcap, scale=_scale(cfg),
+                    impl=("interpret" if cfg.attention_impl == "pallas_interpret"
+                          else "pallas"))
+        out = of.reshape(B_, K_, G_, Sq_, D_).transpose(0, 3, 1, 2, 4)
+        out = out.astype(q.dtype)
+    else:
+        out = flash_attention_xla(
+            q, k, v, causal=causal, window=window, cap=cfg.attn_softcap,
+            scale=_scale(cfg), q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    B, S = x.shape[:2]
+    hd = cfg.resolved_head_dim
+    out = out.reshape(B, S, -1, hd)[:, :, :cfg.n_heads].reshape(
+        B, S, cfg.n_heads * hd)
+    if part is not None:
+        out = part.act(out, ("batch", None, "mlp"))
+    out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
+    return out, (k_cache, v_cache)
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
+                     is_local: bool, pos, compute_dtype, part=None,
+                     cross: bool = False):
+    """Single-token decode against a cache.
+
+    cache: {"k": (B, S_buf, K, D), "v": ..., ["slot_pos": (S_buf,) implicit]}
+    For local layers S_buf == window (ring buffer); global layers S_buf == max
+    sequence length, optionally sharded over 'data' (context parallelism).
+    ``pos``: absolute position of the incoming token — scalar int32 (all
+    sequences aligned, the dry-run path) or (B,) int32 (per-slot positions,
+    the continuous-batching serve path).
+    Returns (out, new_cache).
+    """
+    vec_pos = jnp.ndim(pos) > 0  # per-slot positions (continuous batching)
+    B = x.shape[0]
+    hd, H, K = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    xc = x.astype(compute_dtype)  # (B, 1, d)
+    q = (xc @ p["q_proj"]["kernel"].astype(compute_dtype)).reshape(B, 1, K, G, hd)
+    if cross:
+        k_all, v_all = cache["k"], cache["v"]
+        new_cache = cache
+        if cfg.qk_norm:
+            q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        S_buf = k_all.shape[1]
+        slot_pos = jnp.arange(S_buf)
+        valid = slot_pos[None, :] < cache.get("len", S_buf)
+    else:
+        k = (xc @ p["k_proj"]["kernel"].astype(compute_dtype)).reshape(B, 1, K, hd)
+        v = (xc @ p["v_proj"]["kernel"].astype(compute_dtype)).reshape(B, 1, K, hd)
+        if cfg.qk_norm:
+            q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+            k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+        if cfg.use_rope:
+            posb = (pos[:, None].astype(jnp.int32) if vec_pos
+                    else jnp.full((B, 1), pos, jnp.int32))
+            qf = rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta)
+            q = qf.reshape(B, 1, K, G, hd)
+            k = rope(k, posb, cfg.rope_theta)
+        S_buf = cache["k"].shape[1]
+        is_ring = is_local and cfg.window and S_buf == cfg.window
+        if is_ring:
+            slot = jnp.mod(pos, S_buf)
+            # ring buffer: slot j holds absolute position p = pos - ((pos - j) mod S_buf)
+            j = jnp.arange(S_buf)
+            if vec_pos:
+                slot_pos = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], S_buf)
+                slot_pos = jnp.where(j[None, :] == slot[:, None],
+                                     pos[:, None], slot_pos)
+            else:
+                slot_pos = pos - jnp.mod(pos - j, S_buf)
+                slot_pos = jnp.where(j == slot, pos, slot_pos)
+        else:
+            slot = pos
+            slot_pos = jnp.arange(S_buf)
+            if vec_pos:
+                slot_pos = jnp.broadcast_to(slot_pos[None, :], (B, S_buf))
+        if vec_pos:
+            # per-slot write positions -> batched scatter
+            bidx = jnp.arange(B)
+            k_all = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+            v_all = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": k_all, "v": v_all}
+        posc = pos[:, None] if vec_pos else pos
+        valid = (slot_pos <= posc) & (slot_pos >= 0)
+        if is_local and cfg.window:
+            valid &= slot_pos > posc - cfg.window
+        if not vec_pos:
+            valid = valid[None, :]
+    if part is not None:
+        axis = "kv" if (not cross and not (is_local and S_buf == cfg.window)) else None
+        k_all = part.act(k_all, ("batch", axis, "heads", None))
+        v_all = part.act(v_all, ("batch", axis, "heads", None))
+    s = jnp.einsum("bokgd,bskd->bkgos", q, k_all.astype(compute_dtype),
+                   preferred_element_type=jnp.float32) * _scale(cfg)
+    s = softcap(s, cfg.attn_softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgos,bskd->bokgd", w.astype(compute_dtype),
+                     v_all.astype(compute_dtype),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * hd).astype(compute_dtype)
+    out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
+    return out, new_cache

@@ -1,0 +1,56 @@
+"""Decode-cache construction (KV buffers, recurrent states)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype) -> dict:
+    c: dict = {}
+    hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
+    if spec.mixer in ("full", "local"):
+        s_buf = max_len
+        if spec.mixer == "local" and cfg.window:
+            s_buf = min(cfg.window, max_len)
+        c["self"] = {"k": jnp.zeros((batch, s_buf, K, hd), dtype),
+                     "v": jnp.zeros((batch, s_buf, K, hd), dtype)}
+        if cfg.encoder is not None:
+            c["cross"] = {"k": jnp.zeros((batch, cfg.encoder.n_frames, K, hd), dtype),
+                          "v": jnp.zeros((batch, cfg.encoder.n_frames, K, hd), dtype)}
+    elif spec.mixer == "rglru":
+        w = cfg.rglru.lru_width or cfg.d_model
+        c["rec"] = {"h": jnp.zeros((batch, w), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), dtype)}
+    elif spec.mixer == "mamba":
+        di = cfg.ssm.expand * cfg.d_model
+        c["rec"] = {"h": jnp.zeros((batch, di * cfg.ssm.d_state), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype)}
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Build the zeroed cache pytree matching the model's layer layout."""
+    dtype = jnp.dtype(cfg.dtype)
+    prefix, pattern, n_rep, rem = cfg.layer_specs()
+    cache: dict = {}
+    if prefix:
+        cache["prefix"] = [_layer_cache(s, cfg, batch, max_len, dtype)
+                           for s in prefix]
+    if n_rep:
+        per = [_layer_cache(s, cfg, batch, max_len, dtype) for s in pattern]
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape), per)
+    if rem:
+        cache["suffix"] = [_layer_cache(s, cfg, batch, max_len, dtype)
+                           for s in rem]
+    return cache
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

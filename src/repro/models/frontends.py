@@ -1,0 +1,32 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] entries specify the
+transformer backbone only; ``input_specs()`` provides precomputed frame/patch
+embeddings).
+
+The stubs define the *interface contract* (shapes/dtypes of the precomputed
+embeddings) plus a deterministic synthetic generator used by smoke tests and
+examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_spec(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct for the precomputed frontend embeddings, or None."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.encoder.n_frames, cfg.d_model), dt)
+    if cfg.frontend == "vision":
+        return jax.ShapeDtypeStruct((batch, cfg.n_frontend_tokens, cfg.d_model), dt)
+    return None
+
+
+def synth_frontend(cfg: ModelConfig, batch: int, seed: int = 0):
+    spec = frontend_spec(cfg, batch)
+    if spec is None:
+        return None
+    k = jax.random.PRNGKey(seed)
+    return (jax.random.normal(k, spec.shape, jnp.float32) * 0.02).astype(spec.dtype)

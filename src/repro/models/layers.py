@@ -1,0 +1,164 @@
+"""Shared layer primitives: norms, RoPE, MLPs, initializers.
+
+All modules are functional: ``*_init(rng, ...) -> params`` and a matching
+apply function. Params are plain dict pytrees so they stack cleanly under
+``jax.lax.scan`` and shard via path-based rules (core/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(rng, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d)
+    return (jax.random.normal(rng, (vocab, d), dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.zeros((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + eps)
+        out = x * (1.0 + p["scale"].astype(jnp.float32))
+    else:  # layernorm
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mean) * jax.lax.rsqrt(var + eps)
+        out = x * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]   # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated and plain)
+# --------------------------------------------------------------------------
+def mlp_init(rng, d: int, d_ff: int, gated: bool, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    p = {"up": {"kernel": dense_init(ks[0], d, d_ff, dtype)},
+         "down": {"kernel": dense_init(ks[1], d_ff, d, dtype)}}
+    if gated:
+        p["gate"] = {"kernel": dense_init(ks[2], d, d_ff, dtype)}
+    return p
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, act: str, gated: bool,
+              compute_dtype, part=None) -> jnp.ndarray:
+    xc = x.astype(compute_dtype)
+    up = xc @ p["up"]["kernel"].astype(compute_dtype)
+    if part is not None:
+        up = part.act(up, ("batch",) + (None,) * (up.ndim - 2) + ("mlp",))
+    if gated:
+        gate = xc @ p["gate"]["kernel"].astype(compute_dtype)
+        h = _act(gate, act) * up
+    else:
+        h = _act(up, act)
+    out = h @ p["down"]["kernel"].astype(compute_dtype)
+    if part is not None:
+        out = part.act(out, ("batch",) + (None,) * (out.ndim - 1))
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_dtype_barrier(x, dtype_name: str):
+    return x
+
+
+def _gdb_fwd(x, dtype_name):
+    return x, None
+
+
+def _gdb_bwd(dtype_name, _res, ct):
+    return (ct.astype(dtype_name),)
+
+
+_grad_dtype_barrier.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+def grad_dtype_barrier(x):
+    """Identity whose COTANGENT is forced back to x's dtype.
+
+    jnp's no-op casts (x.astype(dt) when x.dtype == dt) record nothing, so an
+    f32 cotangent born in the fp32 loss/logits einsum flows *unconverted* into
+    the bf16 layer-stack scan, silently doubling every backward activation
+    collective and remat buffer (seen as f32[B,S,d] all-reduces in the dry-run
+    HLO). This barrier pins the backward boundary to the compute dtype."""
+    return _grad_dtype_barrier(x, str(x.dtype))
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B, L, C); w: (C, K). Returns (y, new_state)
+    where state holds the trailing K-1 inputs for streaming decode."""
+    k = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=-2)                    # (B, L+K-1, C)
+    # depthwise conv as sum of shifted slices (K is tiny: 4)
+    L = x.shape[-2]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        y = y + xp[..., i:i + L, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    new_state = xp[..., L:, :]                                  # last K-1 inputs
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,247 @@
+"""Recurrent mixers: RG-LRU (Griffin / RecurrentGemma) and Mamba-1 SSM.
+
+Both reduce to the diagonal linear recurrence ``h_t = a_t * h_{t-1} + b_t``.
+``diag_scan`` evaluates it chunked: an outer ``lax.scan`` over sequence chunks
+(carrying the state) with an inner ``associative_scan`` within each chunk.
+This is the paper's C1 recipe (keep the working set in SPM / VMEM, stream
+tiles, double-buffer) applied to a recurrence — and it is the oracle for the
+Pallas ``lru_scan`` kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, causal_conv1d, dense_init
+
+
+# --------------------------------------------------------------------------
+# diagonal recurrence
+# --------------------------------------------------------------------------
+def diag_scan(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: (B, L, D) fp32.
+
+    Returns (h (B, L, D), h_last (B, D)). Chunked: memory ~ O(B*chunk*D).
+    """
+    B, L, D = a.shape
+    chunk = min(chunk, L)
+    n = -(-L // chunk)
+    pad = n * chunk - L
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    a = a.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    b = b.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, ab):
+        ac, bc = ab                                   # (B, chunk, D)
+        A, Bc = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = A * h[:, None, :] + Bc                # prefix-applied to carry
+        return h_all[:, -1, :], h_all
+
+    if n > 1:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h_last, hs = jax.lax.scan(body, h0, (a, b))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, n * chunk, D)
+    return h[:, :L], h_last
+
+
+def diag_scan_step(a, b, h):
+    """Single decode step."""
+    return a * h + b
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# --------------------------------------------------------------------------
+N_BLOCKS = 8  # block-diagonal gate structure (Griffin §2.4)
+
+
+def rglru_init(rng, cfg: ModelConfig, dtype) -> Params:
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    bs = w // N_BLOCKS
+    ks = jax.random.split(rng, 7)
+    sc = 1.0 / math.sqrt(bs)
+    p = {
+        "x_proj": {"kernel": dense_init(ks[0], d, w, dtype)},
+        "gate_proj": {"kernel": dense_init(ks[1], d, w, dtype)},
+        "out_proj": {"kernel": dense_init(ks[2], w, d, dtype)},
+        "conv": {"kernel": (jax.random.normal(ks[3], (w, r.d_conv), jnp.float32)
+                            / math.sqrt(r.d_conv)).astype(dtype)},
+        "a_gate": {"kernel": (jax.random.normal(ks[4], (N_BLOCKS, bs, bs), jnp.float32)
+                              * sc).astype(dtype)},
+        "x_gate": {"kernel": (jax.random.normal(ks[5], (N_BLOCKS, bs, bs), jnp.float32)
+                              * sc).astype(dtype)},
+        # Lambda: init so that a = sigmoid(lambda) ** c is in ~(0.9, 0.999)
+        "lam": jnp.asarray(jax.random.uniform(
+            ks[6], (w,), jnp.float32, 2.0, 6.0), jnp.float32),
+    }
+    return p
+
+
+def _block_diag_mm(x, w_blocks, compute_dtype):
+    """x: (..., W); w_blocks: (NB, bs, bs) -> (..., W)."""
+    nb, bs, _ = w_blocks.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs)).astype(compute_dtype)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w_blocks.astype(compute_dtype))
+    return y.reshape(x.shape)
+
+
+def rglru_mix(p: Params, cfg: ModelConfig, xw, *, h0, compute_dtype, single_step: bool):
+    """Core RG-LRU on pre-conv features xw: (B, L, W) -> (y, h_last)."""
+    r = cfg.rglru
+    c = r.c_exponent
+    rt = jax.nn.sigmoid(_block_diag_mm(xw, p["a_gate"]["kernel"], compute_dtype)
+                        .astype(jnp.float32))
+    it = jax.nn.sigmoid(_block_diag_mm(xw, p["x_gate"]["kernel"], compute_dtype)
+                        .astype(jnp.float32))
+    log_a = -c * rt * jax.nn.softplus(p["lam"].astype(jnp.float32))  # log sigmoid**c
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * it * xw.astype(jnp.float32)
+    if single_step:
+        h = diag_scan_step(a[:, 0], b[:, 0], h0)
+        return h[:, None, :], h
+    h, h_last = diag_scan(a, b, h0, r.chunk)
+    return h, h_last
+
+
+def rglru_forward(p: Params, cfg: ModelConfig, x, *, state=None, compute_dtype,
+                  part=None, single_step: bool = False):
+    """Full Griffin recurrent block. x: (B, L, d).
+
+    state: None or {"h": (B, W), "conv": (B, K-1, W)}. Returns (out, new_state).
+    """
+    r = cfg.rglru
+    B, L, d = x.shape
+    w = r.lru_width or d
+    xc = x.astype(compute_dtype)
+    xb = xc @ p["x_proj"]["kernel"].astype(compute_dtype)         # (B, L, W)
+    gb = xc @ p["gate_proj"]["kernel"].astype(compute_dtype)
+    if part is not None:
+        xb = part.act(xb, ("batch", None, "mlp"))
+        gb = part.act(gb, ("batch", None, "mlp"))
+    conv_state = None if state is None else state["conv"]
+    xw, new_conv = causal_conv1d(xb, p["conv"]["kernel"], conv_state)
+    h0 = (jnp.zeros((B, w), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+    h, h_last = rglru_mix(p, cfg, xw, h0=h0, compute_dtype=compute_dtype,
+                          single_step=single_step)
+    y = h.astype(compute_dtype) * jax.nn.gelu(gb, approximate=True)
+    out = (y @ p["out_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
+    new_state = {"h": h_last.astype(jnp.float32), "conv": new_conv}
+    return out, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 block
+# --------------------------------------------------------------------------
+def mamba_init(rng, cfg: ModelConfig, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = s.dt_rank or math.ceil(d / 16)
+    ks = jax.random.split(rng, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :], (di, 1))
+    p = {
+        "in_proj": {"kernel": dense_init(ks[0], d, 2 * di, dtype)},
+        "conv": {"kernel": (jax.random.normal(ks[1], (di, s.d_conv), jnp.float32)
+                            / math.sqrt(s.d_conv)).astype(dtype)},
+        "x_proj": {"kernel": dense_init(ks[2], di, dtr + 2 * s.d_state, dtype)},
+        "dt_proj": {"kernel": dense_init(ks[3], dtr, di, dtype),
+                    "bias": jnp.full((di,), -4.6, jnp.float32)},  # softplus≈0.01
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": {"kernel": dense_init(ks[4], di, d, dtype)},
+    }
+    return p
+
+
+def _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step: bool):
+    """xw: (B, L, DI) post-conv post-silu. Returns (y (B,L,DI), h_last).
+
+    The (dt, B, C) projections and the (DI, N)-expanded recurrence inputs are
+    computed per chunk inside the scan so the O(L*DI*N) tensors never
+    materialize for the full sequence.
+    """
+    B, L, DI = xw.shape
+    N = s.d_state
+    dtr = p["x_proj"]["kernel"].shape[-1] - 2 * N
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (DI, N)
+
+    def chunk_ssm(xc, h, valid=None):
+        # xc: (B, c, DI); valid: (c,) bool or None — padded steps must be identity
+        proj = xc @ p["x_proj"]["kernel"].astype(compute_dtype)   # (B, c, dtr+2N)
+        dt, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dtr, dtr + N], axis=-1)
+        dt = jax.nn.softplus(dt @ p["dt_proj"]["kernel"].astype(jnp.float32)
+                             + p["dt_proj"]["bias"])              # (B, c, DI)
+        if valid is not None:
+            dt = dt * valid[None, :, None].astype(jnp.float32)    # a->1, b->0 on pads
+        a = jnp.exp(dt[..., None] * A)                            # (B, c, DI, N)
+        xb = dt * xc.astype(jnp.float32)                          # (B, c, DI)
+        b = xb[..., None] * Bm[:, :, None, :]                     # (B, c, DI, N)
+        c_len = xc.shape[1]
+        if single_step:
+            h_new = a[:, 0].reshape(B, DI * N) * h + b[:, 0].reshape(B, DI * N)
+            hs = h_new[:, None, :]
+        else:
+            hs, h_new = diag_scan(a.reshape(B, c_len, DI * N),
+                                  b.reshape(B, c_len, DI * N), h, c_len)
+        y = jnp.einsum("blds,bls->bld", hs.reshape(B, c_len, DI, N), Cm)
+        y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+        return y, h_new
+
+    if single_step or L <= s.chunk:
+        y, h_last = chunk_ssm(xw, h0)
+        return y, h_last
+
+    n = -(-L // s.chunk)
+    pad = n * s.chunk - L
+    xp = jnp.pad(xw, ((0, 0), (0, pad), (0, 0))) if pad else xw
+    xs = xp.reshape(B, n, s.chunk, DI).transpose(1, 0, 2, 3)
+    valid = (jnp.arange(n * s.chunk) < L).reshape(n, s.chunk)
+
+    def body(h, xc_valid):
+        xc, vd = xc_valid
+        y, h_new = chunk_ssm(xc, h, vd)
+        return h_new, y
+
+    if n > 1:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h_last, ys = jax.lax.scan(body, h0, (xs, valid))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n * s.chunk, DI)[:, :L]
+    return y, h_last
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, x, *, state=None, compute_dtype,
+                  part=None, single_step: bool = False):
+    """Mamba-1 block. x: (B, L, d). state: {"h": (B, DI*N), "conv": (B, K-1, DI)}."""
+    s = cfg.ssm
+    B, L, d = x.shape
+    DI = s.expand * d
+    xz = x.astype(compute_dtype) @ p["in_proj"]["kernel"].astype(compute_dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)                             # (B, L, DI)
+    if part is not None:
+        xi = part.act(xi, ("batch", None, "mlp"))
+        z = part.act(z, ("batch", None, "mlp"))
+    conv_state = None if state is None else state["conv"]
+    xw, new_conv = causal_conv1d(xi, p["conv"]["kernel"], conv_state)
+    xw = jax.nn.silu(xw.astype(jnp.float32)).astype(compute_dtype)
+    h0 = (jnp.zeros((B, DI * s.d_state), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+    y, h_last = _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step)
+    y = y.astype(compute_dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
+    return out, {"h": h_last.astype(jnp.float32), "conv": new_conv}

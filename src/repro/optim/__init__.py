@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, adafactor_lite, adamw,
+                                    apply_updates, clip_by_global_norm,
+                                    get_optimizer, global_norm, sgdm)
+from repro.optim.schedules import constant, cosine, get_schedule, wsd
+
+__all__ = ["Optimizer", "adafactor_lite", "adamw", "apply_updates",
+           "clip_by_global_norm", "constant", "cosine", "get_optimizer",
+           "get_schedule", "global_norm", "sgdm", "wsd"]

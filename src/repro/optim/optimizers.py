@@ -1,0 +1,152 @@
+"""Optimizers (no external deps): AdamW, SGD-momentum, Adafactor-lite.
+
+Functional API mirroring optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, step) -> (updates, state)``. Optimizer
+states inherit the parameter shardings (FSDP/TP), so ZeRO-style sharded
+optimizer state falls out of the partitioner for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+def _tree_zeros_like(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def adamw(lr: float | Callable = 1e-3, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          decay_mask: Callable | None = None) -> Optimizer:
+    """AdamW with fp32 moments. ``lr`` may be a schedule fn(step)->lr."""
+    def init(params):
+        return {"mu": _tree_zeros_like(params), "nu": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        b1t = 1.0 - b1 ** (step.astype(jnp.float32) + 1.0)
+        b2t = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mhat = mu / b1t
+            nhat = nu / b2t
+            step_v = mhat / (jnp.sqrt(nhat) + eps)
+            wd = weight_decay
+            if decay_mask is not None:
+                wd = wd * decay_mask(p)
+            step_v = step_v + wd * p.astype(jnp.float32)
+            return (-lr_t * step_v).astype(p.dtype), mu, nu
+
+        flat_u, flat_mu, flat_nu = [], [], []
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_mu = treedef.flatten_up_to(state["mu"])
+        leaves_nu = treedef.flatten_up_to(state["nu"])
+        leaves_p = treedef.flatten_up_to(params)
+        for g, mu, nu, p in zip(leaves_g, leaves_mu, leaves_nu, leaves_p):
+            u, mu, nu = upd(g, mu, nu, p)
+            flat_u.append(u)
+            flat_mu.append(mu)
+            flat_nu.append(nu)
+        return (jax.tree.unflatten(treedef, flat_u),
+                {"mu": jax.tree.unflatten(treedef, flat_mu),
+                 "nu": jax.tree.unflatten(treedef, flat_nu)})
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def sgdm(lr: float | Callable = 1e-2, *, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mom": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr_t * m).astype(p.dtype), m
+
+        pairs = jax.tree.map(upd, grads, state["mom"], params)
+        updates = jax.tree.map(lambda t: t[0], pairs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        mom = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"mom": mom}
+
+    return Optimizer(init=init, update=update, name="sgdm")
+
+
+def adafactor_lite(lr: float | Callable = 1e-2, *, eps: float = 1e-30,
+                   decay: float = 0.8) -> Optimizer:
+    """Factored second-moment optimizer (memory-lean, for the largest archs)."""
+    def init(params):
+        def f(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"fac": jax.tree.map(f, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step) if callable(lr) else lr
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g2 = jnp.square(g.astype(jnp.float32)) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                u = g.astype(jnp.float32) / jnp.sqrt(denom + eps)
+                return (-lr_t * u).astype(p.dtype), {"vr": vr, "vc": vc}
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g.astype(jnp.float32) / jnp.sqrt(v + eps)
+            return (-lr_t * u).astype(p.dtype), {"v": v}
+
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_s = treedef.flatten_up_to(state["fac"])
+        leaves_p = treedef.flatten_up_to(params)
+        us, ss = [], []
+        for g, s, p in zip(leaves_g, leaves_s, leaves_p):
+            u, s2 = upd(g, s, p)
+            us.append(u)
+            ss.append(s2)
+        return (jax.tree.unflatten(treedef, us),
+                {"fac": jax.tree.unflatten(treedef, ss)})
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def get_optimizer(name: str, lr) -> Optimizer:
+    return {"adamw": adamw, "sgdm": sgdm, "adafactor": adafactor_lite}[name](lr)

@@ -1,0 +1,47 @@
+"""LR schedules, including MiniCPM's WSD (warmup-stable-decay) [arXiv:2404.06395]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int):
+    return jnp.minimum(1.0, (step.astype(jnp.float32) + 1.0) / max(warmup, 1))
+
+
+def cosine(base_lr: float, *, warmup: int, total: int, min_ratio: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = linear_warmup(step, warmup)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * w * cos
+    return f
+
+
+def wsd(base_lr: float, *, warmup: int, stable: int, decay: int,
+        min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau, then
+    exponential-style decay over the final ``decay`` steps."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = linear_warmup(step, warmup)
+        in_decay = s > (warmup + stable)
+        prog = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        decay_mult = jnp.where(in_decay, min_ratio ** prog, 1.0)
+        return base_lr * w * decay_mult
+    return f
+
+
+def constant(base_lr: float, *, warmup: int = 0):
+    def f(step):
+        return base_lr * linear_warmup(step, warmup)
+    return f
+
+
+def get_schedule(name: str, base_lr: float, total: int):
+    if name == "wsd":
+        return wsd(base_lr, warmup=total // 100 + 1, stable=int(total * 0.9),
+                   decay=max(total // 10, 1))
+    if name == "cosine":
+        return cosine(base_lr, warmup=total // 100 + 1, total=total)
+    return constant(base_lr)

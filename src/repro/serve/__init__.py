@@ -1,0 +1,3 @@
+from repro.serve.engine import Request, Result, ServeEngine
+
+__all__ = ["Request", "Result", "ServeEngine"]

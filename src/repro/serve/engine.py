@@ -1,0 +1,208 @@
+"""Serving engine: prefill/decode with slot-based continuous batching.
+
+The engine owns a fixed pool of ``max_slots`` sequence slots sharing one
+batched KV/recurrent cache (batch dim = slot id). Requests are admitted into
+free slots (prefill writes that slot's cache region), then a single jit'd
+decode step advances *all* active slots with per-slot positions — finished
+slots free immediately and new requests take their place without draining the
+batch. This is the serving analogue of Ramora's ROB-less NI + multi-backend
+DMA: many independent in-flight streams, no global reorder barrier.
+
+Prefill is exact-length (jit cache per distinct prompt length). Length
+bucketing is deliberately NOT used: right-padding corrupts ring-buffer
+(sliding-window) caches and recurrent (SSM/RG-LRU) states, so padded prefill
+is only sound for pure global-attention models — exactness is worth the
+occasional recompile here.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, logits_fn
+from repro.models.cache import init_cache
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0                # 0 => greedy
+    frames: np.ndarray | None = None        # enc-dec (audio) models
+    extra_embeds: np.ndarray | None = None  # vlm models
+
+
+@dataclass
+class Result:
+    uid: int
+    tokens: list[int] = field(default_factory=list)
+    finish_reason: str = ""
+    prefill_s: float = 0.0
+    decode_steps: int = 0
+
+
+def _tree_write_slot(big: PyTree, small: PyTree, slot: int) -> PyTree:
+    """Write a batch-1 cache pytree into slot ``slot`` of the pooled cache.
+    Stacked scan blocks carry a leading n_rep dim (batch is axis 1)."""
+    def f(path, b, s):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        axis = 1 if "blocks" in keys else 0
+        idx = [slice(None)] * b.ndim
+        idx[axis] = slice(slot, slot + 1)
+        return b.at[tuple(idx)].set(s.astype(b.dtype))
+    return jax.tree_util.tree_map_with_path(f, big, small)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, *, max_slots: int = 4,
+                 max_len: int = 512, eos_id: int | None = None, seed: int = 0,
+                 part=None):
+        self.cfg, self.params = cfg, params
+        self.max_slots, self.max_len = max_slots, max_len
+        self.eos_id = eos_id
+        self.part = part
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = init_cache(cfg, max_slots, max_len)
+        # slot bookkeeping (host side)
+        self.slot_uid = np.full(max_slots, -1, np.int64)
+        self.slot_pos = np.zeros(max_slots, np.int32)    # next write position
+        self.slot_budget = np.zeros(max_slots, np.int32)
+        self.slot_temp = np.zeros(max_slots, np.float32)
+        self.active = np.zeros(max_slots, bool)
+        self.queue: deque[Request] = deque()
+        self.results: dict[int, Result] = {}
+        self._prefill_cache: dict[tuple, Any] = {}
+        self._decode_fn = jax.jit(self._decode_all)
+        self.stats = {"prefills": 0, "decode_steps": 0, "prefill_recompiles": 0}
+
+    # ------------------------------------------------------------------
+    def _decode_all(self, params, cache, tokens, pos):
+        """One decode step over the whole slot pool (per-slot positions)."""
+        logits, cache = decode_step(params, self.cfg, cache, tokens, pos,
+                                    part=self.part)
+        return logits[:, 0], cache
+
+    def _prefill_fn(self, length: int, has_frames: bool, has_extra: bool):
+        key = (length, has_frames, has_extra)
+        if key not in self._prefill_cache:
+            self.stats["prefill_recompiles"] += 1
+
+            def fn(params, tokens, frames, extra):
+                cache_t = init_cache(self.cfg, 1, self.max_len)
+                hidden, cache, _ = forward(params, self.cfg, tokens,
+                                           frames=frames, extra_embeds=extra,
+                                           cache=cache_t, part=self.part)
+                logits = logits_fn(params, self.cfg, hidden[:, -1:, :],
+                                   self.part)[..., :self.cfg.vocab_size]
+                return logits[:, 0], cache
+
+            self._prefill_cache[key] = jax.jit(fn)
+        return self._prefill_cache[key]
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.results[req.uid] = Result(uid=req.uid)
+
+    def _sample(self, logits: jnp.ndarray, temps: np.ndarray) -> np.ndarray:
+        """Greedy for temp==0 rows, categorical otherwise."""
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        if (temps <= 0).all():
+            return greedy
+        self.rng, k = jax.random.split(self.rng)
+        t = jnp.asarray(np.where(temps <= 0, 1.0, temps))[:, None]
+        sampled = np.asarray(jax.random.categorical(k, logits / t, axis=-1))
+        return np.where(temps <= 0, greedy, sampled)
+
+    def _admit(self):
+        """Fill free slots from the queue (prefill each admitted request)."""
+        for slot in range(self.max_slots):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            t0 = time.perf_counter()
+            prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
+            length = prompt.shape[1]
+            assert length + req.max_new_tokens <= self.max_len, \
+                f"request {req.uid} exceeds max_len {self.max_len}"
+            fn = self._prefill_fn(length, req.frames is not None,
+                                  req.extra_embeds is not None)
+            frames = (jnp.asarray(req.frames)[None]
+                      if req.frames is not None else None)
+            extra = (jnp.asarray(req.extra_embeds)[None]
+                     if req.extra_embeds is not None else None)
+            logits, slot_cache = fn(self.params, jnp.asarray(prompt),
+                                    frames, extra)
+            self.cache = _tree_write_slot(self.cache, slot_cache, slot)
+            first = int(self._sample(logits, np.asarray(
+                [req.temperature]))[0])
+            res = self.results[req.uid]
+            res.tokens.append(first)
+            res.prefill_s = time.perf_counter() - t0
+            self.slot_uid[slot] = req.uid
+            self.slot_pos[slot] = length  # position of `first` when decoded
+            self.slot_budget[slot] = req.max_new_tokens - 1
+            self.slot_temp[slot] = req.temperature
+            self.active[slot] = True
+            self.stats["prefills"] += 1
+            if self.eos_id is not None and first == self.eos_id:
+                self._finish(slot, "eos")
+            elif self.slot_budget[slot] <= 0:
+                self._finish(slot, "length")
+
+    def _finish(self, slot: int, reason: str):
+        res = self.results[self.slot_uid[slot]]
+        res.finish_reason = reason
+        self.active[slot] = False
+        self.slot_uid[slot] = -1
+
+    def step(self) -> int:
+        """Admit + one decode step over active slots. Returns #active."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        # last sampled token per slot feeds the next decode step
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for slot in range(self.max_slots):
+            if self.active[slot]:
+                tokens[slot, 0] = self.results[self.slot_uid[slot]].tokens[-1]
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode_fn(self.params, self.cache,
+                                             jnp.asarray(tokens), pos)
+        nxt = self._sample(logits, self.slot_temp)
+        self.stats["decode_steps"] += 1
+        for slot in range(self.max_slots):
+            if not self.active[slot]:
+                continue
+            res = self.results[self.slot_uid[slot]]
+            tok = int(nxt[slot])
+            res.tokens.append(tok)
+            res.decode_steps += 1
+            self.slot_pos[slot] += 1
+            self.slot_budget[slot] -= 1
+            if self.eos_id is not None and tok == self.eos_id:
+                self._finish(slot, "eos")
+            elif self.slot_budget[slot] <= 0:
+                self._finish(slot, "length")
+        return int(self.active.sum())
+
+    def run(self, requests: list[Request], *, max_steps: int = 100000
+            ) -> list[Result]:
+        """Drive all requests to completion (continuous batching loop)."""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (self.queue or self.active.any()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return [self.results[r.uid] for r in requests]

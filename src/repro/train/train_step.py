@@ -1,0 +1,146 @@
+"""Train / prefill / decode step factories.
+
+``make_train_step`` builds the jit-able step: loss → grads → clip → optimizer,
+with optional microbatch gradient accumulation (``lax.scan``) that overlaps
+each microbatch's backward collectives with the next microbatch's compute —
+the XLA-native analogue of Ogopogo hiding collective latency inside the NoC.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, StrategyConfig
+from repro.models import decode_step as model_decode_step
+from repro.models import forward, lm_loss, logits_fn
+from repro.optim.optimizers import (Optimizer, apply_updates,
+                                    clip_by_global_norm)
+
+PyTree = Any
+
+
+def batch_template(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Shapes of one training/prefill batch (ints are tokens; frontends get
+    precomputed embeddings per the assignment)."""
+    B, S = shape.global_batch, shape.seq_len
+    d = jnp.dtype(cfg.dtype)
+    tpl: dict = {}
+    if cfg.frontend == "vision":
+        s_txt = S - cfg.n_frontend_tokens
+        tpl["tokens"] = jax.ShapeDtypeStruct((B, s_txt), jnp.int32)
+        tpl["extra_embeds"] = jax.ShapeDtypeStruct((B, cfg.n_frontend_tokens, cfg.d_model), d)
+        tpl["targets"] = jax.ShapeDtypeStruct((B, s_txt), jnp.int32)
+    elif cfg.frontend == "audio":
+        tpl["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tpl["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder.n_frames, cfg.d_model), d)
+        tpl["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        tpl["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tpl["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return tpl
+
+
+def make_loss_fn(cfg: ModelConfig, strategy: StrategyConfig, part=None):
+    loss_chunk = cfg.loss_chunk
+    if strategy.chunked_loss and not loss_chunk:
+        loss_chunk = 512
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["targets"],
+                       extra_embeds=batch.get("extra_embeds"),
+                       frames=batch.get("frames"), part=part,
+                       loss_chunk=loss_chunk)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    strategy: StrategyConfig, part=None, *,
+                    clip_norm: float = 1.0):
+    loss_fn = make_loss_fn(cfg, strategy, part)
+    n_mb = max(strategy.overlap_microbatches, 1)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return jax.tree.map(jnp.add, acc, (l, g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(body, zero, mbs)
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, state["opt"], params,
+                                              state["step"])
+        params = apply_updates(params, updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, part=None):
+    """Prefill: run the full prompt, fill the decode cache, return the final
+    position's logits only (never materializes (B, S, V))."""
+    def prefill_step(params, batch, cache):
+        hidden, cache, _ = forward(params, cfg, batch["tokens"],
+                                   extra_embeds=batch.get("extra_embeds"),
+                                   frames=batch.get("frames"),
+                                   cache=cache, part=part)
+        last = hidden[:, -1:, :]
+        logits = logits_fn(params, cfg, last, part)
+        return logits[:, 0], cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, part=None, *, sample: bool = False):
+    """One decode step: token in, logits/next-token out, cache updated."""
+    def serve_step(params, cache, tokens, pos, rng=None):
+        logits, cache = model_decode_step(params, cfg, cache, tokens, pos,
+                                          part=part)
+        if sample:
+            nxt = jax.random.categorical(rng, logits[:, 0] / 0.8, axis=-1)
+            return nxt[:, None], cache
+        return logits, cache
+    return serve_step
+
+
+def train_state_template(cfg: ModelConfig, optimizer: Optimizer):
+    """ShapeDtypeStruct pytree of the full train state (no allocation)."""
+    from repro.models import init as model_init
+
+    params_shape = jax.eval_shape(lambda: model_init(jax.random.PRNGKey(0), cfg))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    return {"params": params_shape, "opt": opt_shape,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def serve_params_template(cfg: ModelConfig):
+    """Serving params: compute-dtype (bf16) copies of the weights."""
+    from repro.models import init as model_init
+
+    params_shape = jax.eval_shape(lambda: model_init(jax.random.PRNGKey(0), cfg))
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != jnp.float32:
+            return x
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dt)
+        return x
+    return jax.tree.map(cast, params_shape)

@@ -1,0 +1,243 @@
+"""Production trainer: checkpoint/restart, preemption, straggler watch,
+fault injection, elastic resume.
+
+The fault-tolerance story is the software analogue of the paper's D2D channel
+allocator (calibrate, detect faults, disable, continue):
+
+- **checkpoint/restart** — async atomic checkpoints every N steps; on start
+  the trainer restores the latest one (params, optimizer, step, data state).
+- **preemption** — SIGTERM/SIGINT triggers a final blocking checkpoint and a
+  clean exit (exit code 0: the scheduler reschedules us).
+- **node failure** — ``FaultInjector`` raises a simulated device failure at a
+  configured step/probability; ``run_with_restarts`` catches it, restores the
+  last checkpoint, and continues — the restart path is *exercised*, not
+  hypothetical.
+- **straggler mitigation** — per-step wall time is compared to k× the rolling
+  median; slow steps are counted and reported through ``on_straggler`` (on a
+  fleet this hook re-dispatches the slow worker's shard).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, restore_checkpoint
+from repro.configs.base import ModelConfig, ShapeConfig, StrategyConfig
+from repro.core.sharding import Partitioner
+from repro.data import Prefetcher, SyntheticLM, device_put_batch
+from repro.models import init as model_init
+from repro.optim.optimizers import Optimizer
+from repro.train.train_step import make_train_step
+
+PyTree = Any
+
+
+class SimulatedDeviceFailure(RuntimeError):
+    """Stands in for a TPU worker dropping out mid-step."""
+
+
+@dataclass
+class FaultInjector:
+    """Raise a SimulatedDeviceFailure at ``at_step`` (once) and/or with
+    probability ``prob`` per step (seeded — deterministic tests)."""
+    at_step: int = -1
+    prob: float = 0.0
+    seed: int = 0
+    _fired: bool = field(default=False, repr=False)
+
+    def check(self, step: int):
+        if step == self.at_step and not self._fired:
+            self._fired = True
+            raise SimulatedDeviceFailure(f"injected failure at step {step}")
+        if self.prob > 0.0:
+            r = np.random.default_rng((self.seed << 16) ^ step).random()
+            if r < self.prob:
+                raise SimulatedDeviceFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class StragglerWatch:
+    """Rolling-median step-time deadline (k × median over a window)."""
+    k: float = 3.0
+    window: int = 32
+    min_samples: int = 5
+    times: deque = field(default_factory=lambda: deque(maxlen=32))
+    n_stragglers: int = 0
+
+    def observe(self, dt: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= self.min_samples:
+            med = float(np.median(self.times))
+            if dt > self.k * med:
+                self.n_stragglers += 1
+                is_straggler = True
+        self.times.append(dt)
+        return is_straggler
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_k: float = 3.0
+    seed: int = 0
+    max_restarts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 strategy: StrategyConfig, optimizer: Optimizer,
+                 tcfg: TrainerConfig, *, mesh=None,
+                 dataset: SyntheticLM | None = None,
+                 fault: FaultInjector | None = None,
+                 on_straggler: Callable[[int, float], None] | None = None):
+        self.cfg, self.shape, self.strategy = cfg, shape, strategy
+        self.optimizer, self.tcfg = optimizer, tcfg
+        self.mesh = mesh
+        self.fault = fault
+        self.on_straggler = on_straggler
+        self.dataset = dataset or SyntheticLM(
+            cfg.vocab_size, shape.seq_len, shape.global_batch, seed=tcfg.seed)
+        self.part = (Partitioner(mesh, strategy, cfg, shape, mode="train")
+                     if mesh is not None else None)
+        self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
+        self.straggler = StragglerWatch(k=tcfg.straggler_k)
+        self.history: list[dict] = []
+        self._stop_requested = False
+        self._step_fn = None
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        step = make_train_step(self.cfg, self.optimizer, self.strategy,
+                               self.part)
+        if self.mesh is not None:
+            state_t = self._state_template()
+            st_sh = self._state_sharding(state_t)
+            batch_sh = self.part.batch_sharding(
+                {"tokens": np.zeros((1, 1), np.int32),
+                 "targets": np.zeros((1, 1), np.int32)})
+            out_sh = (st_sh, {"loss": self.part.scalar_sharding(),
+                              "grad_norm": self.part.scalar_sharding()})
+            self._batch_sh = batch_sh
+            return jax.jit(step, in_shardings=(st_sh, batch_sh),
+                           out_shardings=out_sh, donate_argnums=(0,))
+        self._batch_sh = None
+        return jax.jit(step, donate_argnums=(0,))
+
+    def _state_template(self):
+        from repro.train.train_step import train_state_template
+        return train_state_template(self.cfg, self.optimizer)
+
+    def _state_sharding(self, state_t):
+        assert self.part is not None
+        return {"params": self.part.params_sharding(state_t["params"]),
+                "opt": {k: self.part.params_sharding(v)
+                        for k, v in state_t["opt"].items()},
+                "step": self.part.scalar_sharding()}
+
+    def init_state(self) -> PyTree:
+        params = model_init(jax.random.PRNGKey(self.tcfg.seed), self.cfg)
+        opt = self.optimizer.init(params)
+        state = {"params": params, "opt": opt,
+                 "step": jax.numpy.zeros((), jax.numpy.int32)}
+        if self.mesh is not None:
+            sh = self._state_sharding(jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+            state = jax.tree.map(jax.device_put, state, sh)
+        return state
+
+    # ------------------------------------------------------------------
+    def restore_or_init(self) -> tuple[PyTree, int]:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state(), 0
+        template = self._state_template()
+        shardings = (self._state_sharding(template)
+                     if self.mesh is not None else None)
+        state, meta = restore_checkpoint(self.tcfg.ckpt_dir, template,
+                                         step=latest, shardings=shardings)
+        data_step = int(meta.get("data_step", latest))
+        return state, data_step
+
+    def save(self, step: int, state: PyTree, blocking: bool = False):
+        self.ckpt.save(step, state,
+                       metadata={"data_step": int(step),
+                                 "data_state": self.dataset.state(step),
+                                 "arch": self.cfg.name,
+                                 "mesh": (dict(self.mesh.shape)
+                                          if self.mesh is not None else None)},
+                       blocking=blocking)
+
+    # ------------------------------------------------------------------
+    def train(self, *, install_signal_handlers: bool = False) -> dict:
+        """One trainer incarnation: restore → loop → final checkpoint."""
+        if self._step_fn is None:
+            self._step_fn = self._build_step()
+        state, start = self.restore_or_init()
+        if install_signal_handlers:
+            def _handler(signum, frame):
+                self._stop_requested = True
+            signal.signal(signal.SIGTERM, _handler)
+            signal.signal(signal.SIGINT, _handler)
+
+        pf = Prefetcher(self.dataset, start=start, depth=2)
+        losses = []
+        try:
+            for step in range(start, self.tcfg.steps):
+                t0 = time.perf_counter()
+                got_step, host_batch = pf.get()
+                assert got_step == step, (got_step, step)
+                if self._batch_sh is not None:
+                    batch = device_put_batch(host_batch, self._batch_sh)
+                else:
+                    batch = host_batch
+                # fault injection happens "inside" the step boundary, like a
+                # worker dying mid-collective
+                if self.fault is not None:
+                    self.fault.check(step)
+                state, metrics = self._step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if self.straggler.observe(dt) and self.on_straggler:
+                    self.on_straggler(step, dt)
+                losses.append(loss)
+                self.history.append({"step": step, "loss": loss, "dt": dt})
+                if (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.save(step + 1, state)
+                if self._stop_requested:
+                    self.save(step + 1, state, blocking=True)
+                    return {"state": state, "stopped_at": step + 1,
+                            "losses": losses, "preempted": True,
+                            "n_stragglers": self.straggler.n_stragglers}
+        finally:
+            pf.close()
+        self.save(self.tcfg.steps, state, blocking=True)
+        self.ckpt.wait()
+        return {"state": state, "stopped_at": self.tcfg.steps,
+                "losses": losses, "preempted": False,
+                "n_stragglers": self.straggler.n_stragglers}
+
+    def run_with_restarts(self) -> dict:
+        """Supervisor loop: restart from the latest checkpoint on simulated
+        device failures, up to ``max_restarts`` times."""
+        restarts = 0
+        while True:
+            try:
+                out = self.train()
+                out["restarts"] = restarts
+                return out
+            except SimulatedDeviceFailure:
+                restarts += 1
+                self.ckpt.wait()
+                if restarts > self.tcfg.max_restarts:
+                    raise

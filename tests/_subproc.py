@@ -1,0 +1,31 @@
+"""Run a python snippet in a subprocess with N fake CPU devices.
+
+Multi-device behaviour (collectives, sharded train steps, elastic restore)
+cannot run in the pytest process: jax locks the device count at first init
+and unit tests must see exactly 1 device. Each multi-device test therefore
+ships its body to a fresh interpreter with
+``--xla_force_host_platform_device_count=N``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
+                     ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests see 1 CPU device;
+multi-device tests spawn subprocesses (tests/_subproc.py) so the dry-run's
+512-device trick never leaks into smoke tests or benches."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny(arch: str, **kw):
+    """Session-cached reduced config for an assigned arch."""
+    cfg = reduced(get_arch(arch))
+    return cfg.replace(**kw) if kw else cfg
+
+
+@pytest.fixture(params=sorted(ARCHS))
+def arch_name(request):
+    return request.param

@@ -1,0 +1,97 @@
+"""Checkpointing: atomic roundtrip, async, GC, error surfacing, elasticity."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (AsyncCheckpointer, gc_checkpoints, latest_step,
+                        restore_checkpoint, save_checkpoint)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.zeros((4,))},
+            "opt": {"mu": {"w": jnp.ones((8, 4)), "b": jnp.zeros((4,))}},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    save_checkpoint(tmp_path, 3, s)
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s)
+    r, meta = restore_checkpoint(tmp_path, template)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_metadata_roundtrip(tmp_path):
+    save_checkpoint(tmp_path, 1, _state(), metadata={"data_step": 1, "x": "y"})
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            _state())
+    _, meta = restore_checkpoint(tmp_path, template)
+    assert meta == {"data_step": 1, "x": "y"}
+
+
+def test_latest_and_gc(tmp_path):
+    for step in (1, 5, 3, 9):
+        save_checkpoint(tmp_path, step, _state())
+    assert latest_step(tmp_path) == 9
+    gc_checkpoints(tmp_path, keep_last=2)
+    remaining = sorted(p.name for p in Path(tmp_path).iterdir())
+    assert remaining == ["step_00000005", "step_00000009"]
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_checkpoint(tmp_path, 2, _state())
+    names = [p.name for p in Path(tmp_path).iterdir()]
+    assert not any(n.startswith(".tmp") for n in names)
+    manifest = json.loads((tmp_path / "step_00000002" / "manifest.json")
+                          .read_text())
+    assert manifest["step"] == 2 and len(manifest["leaves"]) == 5
+
+
+def test_missing_leaf_fails_loudly(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(tmp_path, {"b": jax.ShapeDtypeStruct((2,), "float32")})
+
+
+def test_shape_mismatch_fails_loudly(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"a": jax.ShapeDtypeStruct((3,), "float32")})
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path, keep_last=2)
+    for step in (10, 20, 30):
+        ck.save(step, _state(step))
+    ck.wait()
+    assert ck.latest_step() == 30
+    remaining = sorted(p.name for p in Path(tmp_path).iterdir())
+    assert len(remaining) == 2
+
+
+def test_async_snapshot_isolated_from_donation(tmp_path):
+    """The async save snapshots before returning: mutating (donating) the
+    live buffers afterwards must not corrupt the checkpoint."""
+    ck = AsyncCheckpointer(tmp_path)
+    s = {"w": jnp.arange(4.0)}
+    ck.save(1, s)
+    s["w"] = s["w"] * 0  # simulate donation reuse
+    ck.wait()
+    r, _ = restore_checkpoint(tmp_path, {"w": jax.ShapeDtypeStruct((4,), "float32")})
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.arange(4.0))
+
+
+def test_async_error_surfaces(tmp_path):
+    ck = AsyncCheckpointer(tmp_path / "nope" / "\0bad")  # invalid path
+    ck.save(1, {"a": jnp.zeros(())})
+    with pytest.raises(BaseException):
+        ck.wait()

@@ -1,0 +1,128 @@
+"""Distributed integration (subprocess, 8 fake devices): sharded train step ==
+single-device step; elastic checkpoint resharding; dry-run cell E2E."""
+from __future__ import annotations
+
+import pytest
+
+from tests._subproc import run_with_devices
+
+TINY = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch, reduced, strategy
+from repro.configs.base import ShapeConfig
+from repro.core.sharding import Partitioner
+from repro.models import init as model_init
+from repro.optim.optimizers import adamw
+from repro.train.train_step import make_train_step, train_state_template
+
+cfg = reduced(get_arch("qwen3-0.6b")).replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=256, dtype="float32")
+shape = ShapeConfig("t", "train", seq_len=16, global_batch=8)
+opt = adamw(1e-2)
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, 256, (8, 16)), jnp.int32)}
+batch["targets"] = batch["tokens"]
+
+def state0():
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+"""
+
+
+def test_sharded_step_equals_single_device():
+    """(2 data x 2 model x 2 pod) sharded train step == unsharded step —
+    the semantic core of the multi-pod dry-run."""
+    run_with_devices(TINY + """
+# unsharded reference on one device
+step_ref = jax.jit(make_train_step(cfg, opt, strategy("ramora")))
+s_ref, m_ref = step_ref(state0(), batch)
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+strat = strategy("ogopogo", multi_pod=True)
+part = Partitioner(mesh, strat, cfg, shape, mode="train")
+step = make_train_step(cfg, opt, strat, part)
+state = state0()
+st_sh = {"params": part.params_sharding(state["params"]),
+         "opt": {k: part.params_sharding(v) for k, v in state["opt"].items()},
+         "step": part.scalar_sharding()}
+with mesh:
+    state_d = jax.tree.map(jax.device_put, state, st_sh)
+    batch_d = jax.tree.map(jax.device_put, batch, part.batch_sharding(batch))
+    step_j = jax.jit(step, in_shardings=(st_sh, part.batch_sharding(batch)),
+                     out_shardings=(st_sh, None))
+    s_out, m_out = step_j(state_d, batch_d)
+np.testing.assert_allclose(float(m_out["loss"]), float(m_ref["loss"]),
+                           rtol=1e-5, atol=1e-6)
+for a, b in zip(jax.tree.leaves(s_ref["params"]),
+                jax.tree.leaves(s_out["params"])):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=5e-3, atol=5e-5)
+print("sharded == unsharded OK")
+""")
+
+
+def test_elastic_reshard_8_to_4_to_8():
+    """Checkpoints are mesh-agnostic: save on (4,2), restore on (2,2) and
+    (8,1), losses identical — the elastic-resize story."""
+    run_with_devices(TINY + """
+import tempfile
+from repro.ckpt import save_checkpoint, restore_checkpoint
+from repro.train.train_step import train_state_template
+
+def run_steps(mesh_shape, state_in=None, n=2):
+    devs = np.prod(mesh_shape)
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    strat = strategy("ramora")
+    part = Partitioner(mesh, strat, cfg, shape, mode="train")
+    step = make_train_step(cfg, opt, strat, part)
+    state = state_in if state_in is not None else state0()
+    st_t = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    st_sh = {"params": part.params_sharding(st_t["params"]),
+             "opt": {k: part.params_sharding(v) for k, v in st_t["opt"].items()},
+             "step": part.scalar_sharding()}
+    with mesh:
+        state = jax.tree.map(jax.device_put, state, st_sh)
+        sj = jax.jit(step, in_shardings=(st_sh, part.batch_sharding(batch)),
+                     out_shardings=(st_sh, None))
+        losses = []
+        for _ in range(n):
+            state, m = sj(state, jax.tree.map(
+                jax.device_put, batch, part.batch_sharding(batch)))
+            losses.append(float(m["loss"]))
+    return state, losses, st_sh
+
+# continuous 6-step run on (4,2) = truth
+s_truth, l_truth = run_steps((4, 2), n=6)[:2]
+
+# 2 steps on (4,2) -> ckpt -> 2 on (2,2) -> ckpt -> 2 on (8,1)
+d = tempfile.mkdtemp()
+s1, l1, _ = run_steps((4, 2), n=2)
+save_checkpoint(d, 2, s1)
+tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s1)
+r1, _ = restore_checkpoint(d, tmpl)
+s2, l2, _ = run_steps((2, 2), state_in=jax.tree.map(np.asarray, r1), n=2)
+save_checkpoint(d, 4, s2)
+r2, _ = restore_checkpoint(d, tmpl)
+s3, l3, _ = run_steps((8, 1), state_in=jax.tree.map(np.asarray, r2), n=2)
+
+np.testing.assert_allclose(l1 + l2 + l3, l_truth, rtol=1e-5, atol=1e-6)
+print("elastic reshard OK", l_truth)
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_end_to_end():
+    """One full production dry-run cell (512 devices, 16x16 and 2x16x16)."""
+    run_with_devices("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+r = run_cell("qwen3-0.6b", "decode_32k", multi_pod=False, analysis=False)
+assert r["status"] == "ok", r
+r2 = run_cell("qwen3-0.6b", "decode_32k", multi_pod=True, analysis=False)
+assert r2["status"] == "ok", r2
+print("dryrun cell OK")
+""", n_devices=512, timeout=900)

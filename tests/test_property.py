@@ -1,0 +1,133 @@
+"""Hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.collectives import _quantize_int8
+from repro.kernels import ref
+from repro.kernels.ops import _pad_to
+from repro.models.layers import softcap
+
+
+# --------------------------------------------------------------------------
+# linear recurrence algebra (the SSM/RG-LRU foundation)
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 8),
+       st.integers(0, 1000))
+def test_lru_scan_composition(b, l, d, seed):
+    """h(a⊕b streams) == run a then continue with b: the recurrence is a
+    monoid action, which is what makes chunked kernels valid."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.uniform(k1, (b, 2 * l, d), minval=0.2, maxval=0.99)
+    x = jax.random.normal(k2, (b, 2 * l, d))
+    full = ref.lru_scan_ref(a, x)
+    h_mid = full[:, l - 1 + l * 0, :]  # state after first half... compute:
+    first = ref.lru_scan_ref(a[:, :l], x[:, :l])
+    second = ref.lru_scan_ref(a[:, l:], x[:, l:], h0=first[:, -1])
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([first, second], 1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_lru_linearity(seed):
+    """The recurrence is linear in the inputs b."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.uniform(k1, (1, 10, 4), minval=0.1, maxval=0.9)
+    x = jax.random.normal(k2, (1, 10, 4))
+    y = jax.random.normal(k3, (1, 10, 4))
+    hx = ref.lru_scan_ref(a, x)
+    hy = ref.lru_scan_ref(a, y)
+    hxy = ref.lru_scan_ref(a, 2.0 * x - 3.0 * y)
+    np.testing.assert_allclose(np.asarray(hxy), 2 * np.asarray(hx)
+                               - 3 * np.asarray(hy), rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# quantization (gradient compression wire format)
+# --------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_quantization_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = _quantize_int8(x)
+    deq = q.astype(jnp.float32) * scale
+    amax = float(jnp.abs(x).max())
+    assert float(jnp.abs(x - deq).max()) <= amax / 127.0 + 1e-6
+    assert int(jnp.abs(q).max()) <= 127
+
+
+# --------------------------------------------------------------------------
+# numerics helpers
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 64))
+def test_pad_to_shape_contract(n, m):
+    x = jnp.zeros((n, 7))
+    padded, did = _pad_to(x, (m,), (0,))
+    assert padded.shape[0] % m == 0
+    assert padded.shape[0] - n < m
+    assert did == (n % m != 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-30, 30), st.floats(0.5, 100))
+def test_softcap_is_contraction(v, cap):
+    """|softcap(x)| <= min(|x|, cap) and sign-preserving."""
+    x = jnp.asarray(v, jnp.float32)
+    y = float(softcap(x, float(cap)))
+    assert abs(y) <= min(abs(v), cap) + 1e-5
+    assert y * v >= -1e-9
+
+
+# --------------------------------------------------------------------------
+# cross-entropy invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 100))
+def test_xent_uniform_is_log_v(v, seed):
+    from repro.models.transformer import _xent
+    logits = jnp.zeros((2, 3, v))
+    targets = jax.random.randint(jax.random.PRNGKey(seed), (2, 3), 0, v)
+    np.testing.assert_allclose(float(_xent(logits, targets)), np.log(v),
+                               rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 100))
+def test_xent_shift_invariant(seed):
+    from repro.models.transformer import _xent
+    k = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(k, (2, 4, 16))
+    targets = jax.random.randint(k, (2, 4), 0, 16)
+    a = float(_xent(logits, targets))
+    b = float(_xent(logits + 7.5, targets))
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# MoE packing roundtrip
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 1000))
+def test_moe_pack_combine_roundtrip(t, seed):
+    """dispatch(x) then combine(identity-expert) == gate-weighted x when
+    capacity is ample (no drops)."""
+    from repro.models.moe import _combine_sort, _dispatch_sort
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    E, kk = 4, 2
+    x = jax.random.normal(k1, (t, 8))
+    idx = jax.random.randint(k2, (t, kk), 0, E)
+    gate = jnp.full((t, kk), 0.5)
+    C = t * kk  # ample
+    xe, meta = _dispatch_sort(x, gate, idx, C, E)
+    y = _combine_sort(xe, meta, gate, t)
+    # identity expert => y = sum_k gate * x = x (gates sum to 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-4,
+                               atol=1e-5)

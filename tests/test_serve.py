@@ -1,0 +1,99 @@
+"""Serving engine: continuous batching == sequential decode; slot lifecycle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import decode_step, forward, init, logits_fn
+from repro.models.cache import init_cache
+from repro.serve import Request, ServeEngine
+
+
+def _cfg():
+    return reduced(get_arch("qwen3-0.6b")).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+
+
+def _ref_greedy(cfg, params, prompt, max_new, max_len=96):
+    cache_t = init_cache(cfg, 1, max_len)
+    hidden, cache, _ = forward(params, cfg, jnp.asarray(prompt)[None],
+                               cache=cache_t)
+    lg = logits_fn(params, cfg, hidden[:, -1:, :])[..., :cfg.vocab_size]
+    toks = [int(jnp.argmax(lg[0, 0]))]
+    pos = len(prompt)
+    for _ in range(max_new - 1):
+        lg, cache = decode_step(params, cfg, cache,
+                                jnp.asarray([[toks[-1]]], jnp.int32),
+                                jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(lg[0, 0])))
+        pos += 1
+    return toks
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_continuous_batching_matches_sequential(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 12)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 6)))
+            for i in range(7)]
+    engine = ServeEngine(cfg, params, max_slots=3, max_len=96)
+    results = engine.run(reqs)
+    assert all(r.finish_reason == "length" for r in results)
+    for r, req in zip(results, reqs):
+        ref = _ref_greedy(cfg, params, req.prompt, req.max_new_tokens)
+        assert r.tokens == ref, f"uid {r.uid}"
+
+
+def test_slot_reuse_exceeds_pool(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=96)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 256, 5).astype(np.int32),
+                    max_new_tokens=3) for i in range(5)]
+    results = engine.run(reqs)
+    assert len(results) == 5
+    assert engine.stats["prefills"] == 5
+    assert not engine.active.any()
+
+
+def test_eos_stops_early(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, 256, 6).astype(np.int32)
+    # find what greedy emits first, then declare that token the EOS
+    first = _ref_greedy(cfg, params, prompt, 1)[0]
+    engine = ServeEngine(cfg, params, max_slots=1, max_len=96, eos_id=first)
+    [res] = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=10)])
+    assert res.finish_reason == "eos"
+    assert len(res.tokens) == 1
+
+
+def test_overflow_asserts(setup):
+    cfg, params = setup
+    engine = ServeEngine(cfg, params, max_slots=1, max_len=16)
+    req = Request(uid=0, prompt=np.zeros(14, np.int32), max_new_tokens=8)
+    with pytest.raises(AssertionError):
+        engine.run([req])
+
+
+def test_prefill_jit_cache_reused(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=96)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 256, 8).astype(np.int32),
+                    max_new_tokens=2) for i in range(6)]
+    engine.run(reqs)
+    assert engine.stats["prefill_recompiles"] == 1  # one shared length

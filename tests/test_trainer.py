@@ -1,0 +1,119 @@
+"""Trainer: learning, checkpoint/restart determinism, fault tolerance,
+straggler watch, preemption."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced, strategy
+from repro.configs.base import ShapeConfig
+from repro.optim.optimizers import adamw
+from repro.train.trainer import (FaultInjector, SimulatedDeviceFailure,
+                                 StragglerWatch, Trainer, TrainerConfig)
+
+SHAPE = ShapeConfig("t", "train", seq_len=32, global_batch=4)
+
+
+def _tiny_cfg():
+    return reduced(get_arch("qwen3-0.6b")).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256)
+
+
+def _trainer(tmp_path, steps=8, **kw):
+    tcfg = TrainerConfig(steps=steps, ckpt_dir=str(tmp_path),
+                         ckpt_every=kw.pop("ckpt_every", 4), seed=0)
+    return Trainer(_tiny_cfg(), SHAPE, strategy("ramora"), adamw(1e-3), tcfg,
+                   **kw)
+
+
+def test_loss_decreases(tmp_path):
+    out = _trainer(tmp_path, steps=30).train()
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_restart_resumes_exactly(tmp_path):
+    """Interrupted-and-resumed run == uninterrupted run (same data, steps)."""
+    full = _trainer(tmp_path / "a", steps=8, ckpt_every=100).train()
+
+    t1 = _trainer(tmp_path / "b", steps=4, ckpt_every=4)
+    t1.train()
+    t2 = _trainer(tmp_path / "b", steps=8, ckpt_every=4)
+    resumed = t2.train()
+
+    np.testing.assert_allclose(full["losses"][4:], resumed["losses"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fault_injection_restarts(tmp_path):
+    t = _trainer(tmp_path, steps=8, ckpt_every=2,
+                 fault=FaultInjector(at_step=5))
+    out = t.run_with_restarts()
+    assert out["restarts"] == 1
+    assert out["stopped_at"] == 8
+
+
+def test_fault_exhausts_restarts(tmp_path):
+    t = _trainer(tmp_path, steps=8, ckpt_every=100,
+                 fault=FaultInjector(prob=1.0))
+    t.tcfg = TrainerConfig(steps=8, ckpt_dir=str(tmp_path), ckpt_every=100,
+                           max_restarts=2, seed=0)
+    with pytest.raises(SimulatedDeviceFailure):
+        t.run_with_restarts()
+
+
+def test_straggler_watch_unit():
+    w = StragglerWatch(k=3.0, min_samples=3)
+    for _ in range(5):
+        assert not w.observe(1.0)
+    assert w.observe(10.0)      # 10x median
+    assert not w.observe(1.1)
+    assert w.n_stragglers == 1
+
+
+def test_straggler_hook_fires(tmp_path):
+    hits = []
+
+    class SlowDataset:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def batch_at(self, step):
+            if step == 6:
+                import time
+                time.sleep(1.0)  # simulated straggling worker
+            return self.inner.batch_at(step)
+
+        def state(self, step):
+            return self.inner.state(step)
+
+    from repro.data import SyntheticLM
+    ds = SlowDataset(SyntheticLM(256, 32, 4, seed=0))
+    t = _trainer(tmp_path, steps=10, dataset=ds,
+                 on_straggler=lambda s, dt: hits.append((s, dt)))
+    t.tcfg = TrainerConfig(steps=10, ckpt_dir=str(tmp_path), ckpt_every=100,
+                           straggler_k=3.0, seed=0)
+    t.straggler = StragglerWatch(k=3.0, min_samples=3)
+    t.train()
+    assert any(s == 6 for s, _ in hits), hits
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    t = _trainer(tmp_path, steps=100, ckpt_every=1000)
+    orig_build = t._build_step
+
+    def build():
+        fn = orig_build()
+
+        def wrapped(state, batch):
+            out = fn(state, batch)
+            if int(np.asarray(out[0]["step"])) == 3:
+                t._stop_requested = True  # SIGTERM arrives mid-run
+            return out
+        return wrapped
+
+    t._build_step = build
+    out = t.train()
+    assert out["preempted"] and out["stopped_at"] == 3
+    assert t.ckpt.latest_step() == 3
