@@ -20,7 +20,7 @@ import numpy as np
 
 from benchmarks._util import emit, timeit
 from repro.core.topology import CHIP
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, use_backend
 
 
 def _util(flops: float, bytes_hbm: float, dtype="bfloat16") -> float:
@@ -84,10 +84,10 @@ def streaming_speedup() -> list[dict]:
     table = jax.random.normal(k, (65536, 32), jnp.float32)
     idx = jax.random.randint(k, (8192,), 0, 65536)
 
-    _, t_naive = timeit(ops.gather_rows, table, idx, impl="interpret", n=2)
-    _, t_packed = timeit(ops.packed_gather_rows, table, idx,
-                         impl="interpret", pack=8, n=2)
-    got = ops.packed_gather_rows(table, idx, impl="interpret", pack=8)
+    with use_backend("interpret"):
+        _, t_naive = timeit(ops.gather_rows, table, idx, n=2)
+        _, t_packed = timeit(ops.packed_gather_rows, table, idx, pack=8, n=2)
+        got = ops.packed_gather_rows(table, idx, pack=8)
     exact = bool((np.asarray(got) == np.asarray(table)[np.asarray(idx)]).all())
 
     # byte model: naive moves 32B (256-bit) per 8B useful row-chunk element;

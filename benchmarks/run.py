@@ -1,9 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4a,fig7] [--skip-slow]
+                                          [--dry-run]
 
 Each module prints a CSV (also persisted to experiments/bench/<name>.csv)
 and asserts its paper-anchor directional claims (DESIGN.md §8).
+
+``--dry-run`` imports every suite, resolves the kernel-backend registry, and
+exits without running — the CI smoke step that catches import/registration
+breakage in seconds.
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip table1 (512-device compiles) unless cached")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="import suites + registry and exit without running")
     args = ap.parse_args()
 
     from benchmarks import fig4a, fig4b, fig4c, fig7, table1
@@ -26,6 +33,17 @@ def main() -> None:
     if args.only:
         keep = args.only.split(",")
         suites = {k: v for k, v in suites.items() if k in keep}
+
+    if args.dry_run:
+        from repro.kernels.dispatch import registry, resolve_backend
+        print(f"suites: {', '.join(suites)}")
+        print(f"kernel backend: {resolve_backend().name} "
+              f"(platform {resolve_backend().platform})")
+        print("registered ops:")
+        for line in registry.describe().splitlines():
+            print(f"  {line}")
+        print("dry-run OK")
+        return
 
     failures = []
     for name, fn in suites.items():

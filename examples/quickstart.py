@@ -38,11 +38,11 @@ print(f"after 1 step: loss={float(metrics['loss']):.4f}  "
 
 # 4) Show the production sharding plan (what the 16x16 dry-run uses) for a
 #    few parameters — logical axes -> mesh axes, no devices needed.
-from repro.core.sharding import Partitioner
+from repro.core.sharding import Partitioner, abstract_mesh
 
 full = get_arch("qwen3-0.6b")
 shape = ShapeConfig("train_4k", "train", 4096, 256)
-mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+mesh = abstract_mesh((16, 16), ("data", "model"))
 part = Partitioner(mesh, strategy("ramora"), full, shape)
 print("\nproduction sharding plan (16x16 ramora):")
 for path, shp in [("embed/table", (151936, 1024)),
@@ -50,3 +50,22 @@ for path, shp in [("embed/table", (151936, 1024)),
                   ("blocks/mlp/up/kernel", (14, 1024, 3072))]:
     spec = part._param_spec(path, len(shp), shp)
     print(f"  {path:34s} {str(shp):18s} -> {spec}")
+
+# 5) Kernel-backend registry: every hot-spot op dispatches through
+#    repro.kernels.dispatch — backends are negotiated per call (capability
+#    predicates + priorities), with the ref oracle as the universal fallback.
+from repro.kernels import ops
+from repro.kernels.dispatch import registry, resolve_backend, use_backend
+
+print(f"\nkernel registry (default backend: {resolve_backend().name}):")
+for line in registry.describe().splitlines():
+    print(f"  {line}")
+x = jnp.ones((64, 32))
+w = jnp.ones((32, 16))
+with use_backend("interpret"):          # Pallas kernels, interpreted on CPU
+    y = ops.gemm(x, w, act="gelu")
+print(f"registry gemm (interpret backend): out={y.shape}, "
+      f"mean={float(y.mean()):.3f}")
+# pin kernel tiles per scope (or per StrategyConfig.kernel_blocks):
+with use_backend("interpret", blocks={"gemm": {"block_m": 16}}):
+    ops.gemm(x, w)

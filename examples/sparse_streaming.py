@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, use_backend
 
 
 def bench(fn, *args, n=3, **kw):
@@ -30,7 +30,8 @@ def main():
     # 1) dense GEMM with fused in-stream epilogue (C1 + C5b)
     x = jax.random.normal(k, (M, K), jnp.float32)
     w = jax.random.normal(k, (K, N), jnp.float32)
-    out, t_gemm = bench(ops.gemm, x, w, scale=0.5, act="gelu", impl="interpret")
+    with use_backend("interpret"):
+        out, t_gemm = bench(ops.gemm, x, w, scale=0.5, act="gelu")
     exp = ref.gemm_ref(x, w, scale=0.5, act="gelu")
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=1e-4, atol=1e-4)
@@ -40,9 +41,9 @@ def main():
     #    flit, index-sorted 'temporal coalescer') — the C5c mechanism
     table = jax.random.normal(k, (4096, 64), jnp.float32)
     idx = jax.random.randint(k, (2048,), 0, 4096)
-    g1, t_naive = bench(ops.gather_rows, table, idx, impl="interpret")
-    g2, t_packed = bench(ops.packed_gather_rows, table, idx,
-                         impl="interpret", pack=8)
+    with use_backend("interpret"):
+        g1, t_naive = bench(ops.gather_rows, table, idx)
+        g2, t_packed = bench(ops.packed_gather_rows, table, idx, pack=8)
     np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
     print(f"gather naive                    {t_naive*1e3:8.1f} ms")
     print(f"gather packed (8/flit, sorted)  {t_packed*1e3:8.1f} ms   (exact)")

@@ -114,7 +114,48 @@ class ModelConfig:
                                   # XLA cost_analysis counts while-bodies once.
     attn_chunk: int = 1024        # q-chunk for the jnp flash attention
     loss_chunk: int = 0           # 0 => full logits; >0 => chunked vocab loss
-    attention_impl: str = "xla"   # xla | pallas | pallas_interpret
+    # kernel selection flows through the backend registry
+    # (repro.kernels.dispatch): "" keeps the pure-XLA paths (the only option
+    # for training — kernel backends are forward/inference paths); "auto"
+    # opts into the Pallas kernels when the platform has them (TPU); "ref" |
+    # "interpret" | "pallas" pin a registry backend for the whole model
+    # graph. A use_backend(...) scope around the model call overrides this
+    # field. Read through ``resolved_kernel_backend``.
+    kernel_backend: str = ""      # "" | auto | ref | interpret | pallas
+    # DEPRECATED: pre-registry attention switch. Non-default values emit a
+    # DeprecationWarning and map onto the kernel backend ("pallas" ->
+    # "pallas", "pallas_interpret" -> "interpret") unless kernel_backend is
+    # set explicitly; resolution happens in ``resolved_kernel_backend`` so
+    # replace(attention_impl="xla") round-trips back to the XLA paths.
+    attention_impl: str = "xla"   # deprecated: xla | pallas | pallas_interpret
+
+    _ATTENTION_IMPL_MAP = {"xla": "", "pallas": "pallas",
+                           "pallas_interpret": "interpret"}
+
+    def __post_init__(self):
+        if self.kernel_backend not in ("", "auto", "ref", "interpret",
+                                       "pallas"):
+            raise ValueError(
+                f"kernel_backend={self.kernel_backend!r}; expected '', "
+                "'auto', 'ref', 'interpret', or 'pallas'")
+        if self.attention_impl not in self._ATTENTION_IMPL_MAP:
+            raise ValueError(
+                f"attention_impl={self.attention_impl!r}; expected 'xla', "
+                "'pallas', or 'pallas_interpret'")
+        if self.attention_impl != "xla":
+            import warnings
+            warnings.warn(
+                "ModelConfig.attention_impl is deprecated; use "
+                "kernel_backend='pallas' / 'interpret' (kernel selection now "
+                "flows through repro.kernels.dispatch)",
+                DeprecationWarning, stacklevel=3)
+
+    @property
+    def resolved_kernel_backend(self) -> str:
+        """Backend for model layers: explicit kernel_backend, else the
+        deprecated attention_impl mapping, else "" (pure-XLA paths)."""
+        return (self.kernel_backend
+                or self._ATTENTION_IMPL_MAP[self.attention_impl])
 
     # ---- derived ----
     @property
@@ -234,6 +275,11 @@ class StrategyConfig:
     grad_compression: str = "none"  # none | int8_ef
     overlap_microbatches: int = 1   # >1: grad-accum loop to overlap comm/compute
     remat: str = "block"
+    # kernel block-size tuning overrides for the op registry: hashable tuple
+    # of (op, bucket, ((kwarg, size), ...)) entries, bucket "*" = any shape
+    # bucket. Decoded by repro.kernels.dispatch.blocks_from_pairs and applied
+    # by call sites that own a strategy (e.g. the serve engine).
+    kernel_blocks: tuple = ()
 
     @property
     def mesh_axes(self) -> tuple[str, ...]:

@@ -25,6 +25,20 @@ from jax.sharding import PartitionSpec as P
 PyTree = Any
 
 
+def shard_map_compat(body, *, mesh: Mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: new API (full-manual via
+    ``axis_names``, ``check_vma``) when present, else the
+    ``jax.experimental.shard_map`` spelling (always manual over every mesh
+    axis, ``check_rep`` instead of ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(mesh.axis_names), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 # --------------------------------------------------------------------------
 # hierarchical (in-network style) all-reduce
 # --------------------------------------------------------------------------
@@ -61,9 +75,8 @@ def hierarchical_allreduce(x: jnp.ndarray, mesh: Mesh, *,
     # full-manual shard_map: jax rejects out_specs=P() when axis_names is a
     # strict subset of the mesh axes; manual-ing every axis keeps semantics
     # (inputs here are replicated) and sidesteps the partial-manual limits.
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=spec, out_specs=spec,
-                         axis_names=set(mesh.axis_names), check_vma=False)(x)
+    return shard_map_compat(body, mesh=mesh, in_specs=spec,
+                            out_specs=spec)(x)
 
 
 def flat_allreduce(x: jnp.ndarray, mesh: Mesh, axes: tuple[str, ...]):
@@ -72,8 +85,8 @@ def flat_allreduce(x: jnp.ndarray, mesh: Mesh, axes: tuple[str, ...]):
     def body(xl):
         return jax.lax.psum(xl, axes)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names=set(mesh.axis_names), check_vma=False)(x)
+    return shard_map_compat(body, mesh=mesh, in_specs=P(),
+                            out_specs=P())(x)
 
 
 # --------------------------------------------------------------------------
@@ -85,8 +98,8 @@ def multicast(x: jnp.ndarray, mesh: Mesh, axis: str, root: int = 0):
         full = jax.lax.all_gather(xl, axis, axis=0, tiled=False)
         return full[root]
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names=set(mesh.axis_names), check_vma=False)(x)
+    return shard_map_compat(body, mesh=mesh, in_specs=P(),
+                            out_specs=P())(x)
 
 
 def barrier(mesh: Mesh, axes: tuple[str, ...]):
@@ -95,8 +108,8 @@ def barrier(mesh: Mesh, axes: tuple[str, ...]):
         return jax.lax.psum(t, axes)
 
     tok = jnp.ones((), jnp.int32)
-    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names=set(mesh.axis_names), check_vma=False)(tok)
+    return shard_map_compat(body, mesh=mesh, in_specs=P(),
+                            out_specs=P())(tok)
 
 
 # --------------------------------------------------------------------------
@@ -135,5 +148,5 @@ def compressed_psum(x: jnp.ndarray, mesh: Mesh, axes: tuple[str, ...],
         mean = (qs.astype(jnp.float32) * ss).sum(0) / n
         return mean, local_err
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
-                         axis_names=set(mesh.axis_names), check_vma=False)(x)
+    return shard_map_compat(body, mesh=mesh, in_specs=P(),
+                            out_specs=(P(), P()))(x)

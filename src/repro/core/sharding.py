@@ -26,6 +26,17 @@ from repro.configs.base import ModelConfig, ShapeConfig, StrategyConfig
 PyTree = Any
 
 
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.sharding.AbstractMesh`` across jax versions: the new
+    ``(shape, axis_names)`` spelling when accepted, else the 0.4.x
+    ``((name, size), ...)`` shape-tuple form."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def _axes_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

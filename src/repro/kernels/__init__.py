@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer: Pallas hot-spot kernels behind a backend registry.
+
+Public surface:
+  * :mod:`repro.kernels.ops` — the registry-dispatched ops (``gemm``,
+    ``flash_attention``, ``lru_scan``, ``gather_rows``,
+    ``packed_gather_rows``, ``instream_scale_reduce``).
+  * :mod:`repro.kernels.dispatch` — ``OpRegistry``, ``use_backend``,
+    capability negotiation, block-size tuning (re-exported here).
+  * :mod:`repro.kernels.ref` — the pure-jnp oracles (registered as the
+    universal negotiation fallback).
+
+Per-kernel modules (gemm.py, flash_attention.py, ...) hold the raw
+``pallas_call`` wrappers; add new kernels there and register them in ops.py.
+See docs/backends.md.
+"""
+from repro.kernels.dispatch import (BACKENDS, KERNEL_BACKENDS, Backend,
+                                    BlockSpec, OpRegistry,
+                                    kernel_scope_active, registry,
+                                    requested_backend, resolve_backend,
+                                    use_backend)
+
+__all__ = ["BACKENDS", "KERNEL_BACKENDS", "Backend", "BlockSpec",
+           "OpRegistry", "kernel_scope_active", "registry",
+           "requested_backend", "resolve_backend", "use_backend"]

@@ -1,9 +1,15 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public kernel ops, dispatched through the backend registry.
 
-Each op pads its inputs to kernel-aligned shapes, dispatches to the Pallas
-kernel (``impl='pallas'`` on TPU, ``impl='interpret'`` for CPU validation) or
-the pure-jnp oracle (``impl='ref'``), and unpads. The model layers call these
-through ``cfg.attention_impl``-style switches.
+Each op here is a *name* in :data:`repro.kernels.dispatch.registry`. The
+Pallas entry pads its operands to kernel-aligned tiles (sizes negotiated from
+the per-op tuning table), runs the kernel (compiled on TPU, interpreted for
+CPU validation), and unpads only when padding actually happened; the pure-jnp
+oracle in :mod:`repro.kernels.ref` is registered alongside it as the universal
+fallback. There are no ``impl=`` switches — select a backend with
+``dispatch.use_backend(...)`` (or let platform auto-detection pick), and
+requests a kernel can't serve (GQA head counts outside the kernel layout,
+sub-lane head dims, integer dtypes) negotiate down to the oracle instead of
+erroring. See docs/backends.md.
 """
 from __future__ import annotations
 
@@ -13,12 +19,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.dispatch import OpRequest, registry, use_backend
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.gemm import gemm as _gemm
 from repro.kernels.instream import instream_scale_reduce as _instream
 from repro.kernels.lru_scan import lru_scan as _lru
 from repro.kernels.packed_gather import gather_rows as _gather
 from repro.kernels.packed_gather import packed_gather_rows as _packed_gather
+
+__all__ = ["flash_attention", "gather_rows", "gemm", "instream_scale_reduce",
+           "lru_scan", "packed_gather_rows", "registry", "use_backend"]
 
 
 def _pad_to(x, mults, axes):
@@ -32,85 +42,191 @@ def _pad_to(x, mults, axes):
     return (jnp.pad(x, pads), True) if padded else (x, False)
 
 
-@partial(jax.jit, static_argnames=("scale", "act", "impl", "block_m",
-                                   "block_n", "block_k"))
-def gemm(x, w, bias=None, *, scale: float = 1.0, act: str | None = None,
-         impl: str = "interpret", block_m: int = 128, block_n: int = 128,
-         block_k: int = 128):
-    if impl == "ref":
-        return _ref.gemm_ref(x, w, bias=bias, scale=scale, act=act)
+# --------------------------------------------------------------------------
+# gemm — streaming tiled GEMM with fused epilogue (paper C1 + C5b)
+# --------------------------------------------------------------------------
+def _gemm_supports(req: OpRequest) -> bool:
+    return (len(req.shapes) >= 2 and all(len(s) == 2 for s in req.shapes[:2])
+            and req.floating())
+
+
+@registry.register("gemm", "pallas", backends=("pallas", "interpret"),
+                   supports=_gemm_supports, priority=10, pass_interpret=True)
+@partial(jax.jit, static_argnames=("scale", "act", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def _gemm_kernel(x, w, bias=None, *, scale: float = 1.0, act: str | None = None,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 interpret: bool = False):
     M, K = x.shape
     N = w.shape[1]
-    xp, _ = _pad_to(x, (block_m, block_k), (0, 1))
-    wp, _ = _pad_to(w, (block_k, block_n), (0, 1))
+    xp, px = _pad_to(x, (block_m, block_k), (0, 1))
+    wp, pw = _pad_to(w, (block_k, block_n), (0, 1))
     bp = None
     if bias is not None:
         bp, _ = _pad_to(bias, (block_n,), (0,))
     out = _gemm(xp, wp, bias=bp, scale=scale, act=act, block_m=block_m,
-                block_n=block_n, block_k=block_k,
-                interpret=(impl == "interpret"))
-    return out[:M, :N]
+                block_n=block_n, block_k=block_k, interpret=interpret)
+    return out[:M, :N] if (px or pw) else out
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "cap", "scale", "impl",
-                                   "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    cap: float = 0.0, scale: float | None = None,
-                    impl: str = "interpret", block_q: int = 128,
-                    block_k: int = 128):
-    """q: (BH, Sq, D); k, v: (BK, Skv, D), BH % BK == 0."""
-    if impl == "ref":
-        G = q.shape[0] // k.shape[0]
-        kr = jnp.repeat(k, G, 0) if G > 1 else k
-        vr = jnp.repeat(v, G, 0) if G > 1 else v
-        return _ref.flash_attention_ref(q, kr, vr, causal=causal,
-                                        window=window, cap=cap, scale=scale)
-    BH, Sq, D = q.shape
+@registry.register("gemm", "ref", backends=("ref", "interpret", "pallas"))
+@partial(jax.jit, static_argnames=("scale", "act"))
+def _gemm_ref(x, w, bias=None, *, scale: float = 1.0, act: str | None = None):
+    return _ref.gemm_ref(x, w, bias=bias, scale=scale, act=act)
+
+
+registry.register_blocks("gemm", "small", block_m=32, block_n=32, block_k=32)
+registry.register_blocks("gemm", "large", block_m=128, block_n=128,
+                         block_k=128)
+
+
+def gemm(x, w, bias=None, *, scale: float = 1.0, act: str | None = None,
+         **blocks):
+    """x: (M, K) @ w: (K, N) with fused scale/bias/activation epilogue.
+
+    Tile sizes come from the tuning table; pass ``block_m``/``block_n``/
+    ``block_k`` to pin them for this call.
+    """
+    return registry.dispatch("gemm", x, w, bias, scale=scale, act=act,
+                             **blocks)
+
+
+# --------------------------------------------------------------------------
+# flash_attention — FlashAttention-2 schedule (paper §II-C)
+# --------------------------------------------------------------------------
+def _fa_supports(req: OpRequest) -> bool:
+    if len(req.shapes) < 3 or any(len(s) != 3 for s in req.shapes[:3]):
+        return False
+    (BH, _, D), (BK, _, _) = req.shapes[0], req.shapes[1]
+    # kernel layout: kv tiles shared across each GQA group (BH = BK*G), and
+    # the head dim must fill at least one sublane — else negotiate to ref
+    return BH % BK == 0 and D >= 8 and req.floating()
+
+
+@registry.register("flash_attention", "pallas",
+                   backends=("pallas", "interpret"), supports=_fa_supports,
+                   priority=10, pass_interpret=True)
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "scale",
+                                   "block_q", "block_k", "interpret"))
+def _fa_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+               cap: float = 0.0, scale: float | None = None,
+               block_q: int = 128, block_k: int = 128,
+               interpret: bool = False):
+    Sq = q.shape[1]
     Skv = k.shape[1]
     bq = min(block_q, Sq)
     bk = min(block_k, Skv)
-    qp, _ = _pad_to(q, (bq,), (1,))
+    qp, pq = _pad_to(q, (bq,), (1,))
     kp, _ = _pad_to(k, (bk,), (1,))
     vp, _ = _pad_to(v, (bk,), (1,))
     out = _fa(qp, kp, vp, causal=causal, window=window, cap=cap, scale=scale,
-              kv_len=Skv, block_q=bq, block_k=bk,
-              interpret=(impl == "interpret"))
-    return out[:, :Sq]
+              kv_len=Skv, block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :Sq] if pq else out
 
 
-@partial(jax.jit, static_argnames=("impl", "block_d", "chunk"))
-def lru_scan(a, b, *, impl: str = "interpret", block_d: int = 512,
-             chunk: int = 256):
-    if impl == "ref":
-        return _ref.lru_scan_ref(a, b)
+@registry.register("flash_attention", "ref",
+                   backends=("ref", "interpret", "pallas"))
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "scale"))
+def _fa_ref(q, k, v, *, causal: bool = True, window: int = 0, cap: float = 0.0,
+            scale: float | None = None):
+    # ref.flash_attention_ref handles GQA with a grouped reshape — no
+    # jnp.repeat'd K/V materialization at high group counts
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    cap=cap, scale=scale)
+
+
+registry.register_blocks("flash_attention", "small", block_q=32, block_k=32)
+registry.register_blocks("flash_attention", "large", block_q=128, block_k=128)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, scale: float | None = None, **blocks):
+    """q: (BH, Sq, D); k, v: (BK, Skv, D) with BH % BK == 0 (GQA groups).
+
+    Head counts or dims outside the kernel layout negotiate down to the
+    grouped oracle. ``block_q``/``block_k`` pin tile sizes for this call.
+    """
+    return registry.dispatch("flash_attention", q, k, v, causal=causal,
+                             window=window, cap=cap, scale=scale, **blocks)
+
+
+# --------------------------------------------------------------------------
+# lru_scan — diagonal linear recurrence (RG-LRU / Mamba foundation)
+# --------------------------------------------------------------------------
+def _lru_supports(req: OpRequest) -> bool:
+    return (len(req.shapes) >= 2 and all(len(s) == 3 for s in req.shapes[:2])
+            and req.floating())
+
+
+@registry.register("lru_scan", "pallas", backends=("pallas", "interpret"),
+                   supports=_lru_supports, priority=10, pass_interpret=True)
+@partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def _lru_kernel(a, b, *, block_d: int = 512, chunk: int = 256,
+                interpret: bool = False):
     B, L, D = a.shape
     bd = min(block_d, D)
     ck = min(chunk, L)
     # pad time with identity (a=1, b=0), channels with zeros
-    ap, _ = _pad_to(a, (ck,), (1,))
-    if ap.shape[1] != L:
+    ap, pt = _pad_to(a, (ck,), (1,))
+    if pt:
         ap = ap.at[:, L:, :].set(1.0)
     bp, _ = _pad_to(b, (ck,), (1,))
-    ap, _ = _pad_to(ap, (bd,), (2,))
+    ap, pd = _pad_to(ap, (bd,), (2,))
     bp, _ = _pad_to(bp, (bd,), (2,))
-    out = _lru(ap, bp, block_d=bd, chunk=ck, interpret=(impl == "interpret"))
-    return out[:, :L, :D]
+    out = _lru(ap, bp, block_d=bd, chunk=ck, interpret=interpret)
+    return out[:, :L, :D] if (pt or pd) else out
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def gather_rows(table, idx, *, impl: str = "interpret"):
-    if impl == "ref":
-        return _ref.gather_rows_ref(table, idx)
-    return _gather(table, idx, interpret=(impl == "interpret"))
+@registry.register("lru_scan", "ref", backends=("ref", "interpret", "pallas"))
+@jax.jit
+def _lru_ref(a, b):
+    return _ref.lru_scan_ref(a, b)
 
 
-@partial(jax.jit, static_argnames=("impl", "pack", "sort"))
-def packed_gather_rows(table, idx, *, impl: str = "interpret", pack: int = 8,
-                       sort: bool = True):
-    """Packed/coalesced indexed stream. With ``sort`` (the temporal
-    coalescer), gathers are issued in index order and unpermuted after."""
-    if impl == "ref":
-        return _ref.gather_rows_ref(table, idx)
+registry.register_blocks("lru_scan", "*", block_d=512, chunk=256)
+
+
+def lru_scan(a, b, **blocks):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 (zero initial state).
+
+    a, b: (B, L, D). ``block_d``/``chunk`` pin kernel tile sizes.
+    """
+    return registry.dispatch("lru_scan", a, b, **blocks)
+
+
+# --------------------------------------------------------------------------
+# gather_rows / packed_gather_rows — indexed streams (paper C2 / C5c)
+# --------------------------------------------------------------------------
+def _gather_supports(req: OpRequest) -> bool:
+    return (len(req.shapes) >= 2 and len(req.shapes[0]) == 2
+            and len(req.shapes[1]) == 1 and "int" in req.dtypes[1])
+
+
+@registry.register("gather_rows", "pallas", backends=("pallas", "interpret"),
+                   supports=_gather_supports, priority=10, pass_interpret=True)
+@partial(jax.jit, static_argnames=("interpret",))
+def _gather_kernel(table, idx, *, interpret: bool = False):
+    return _gather(table, idx, interpret=interpret)
+
+
+@registry.register("gather_rows", "ref",
+                   backends=("ref", "interpret", "pallas"))
+@jax.jit
+def _gather_ref(table, idx):
+    return _ref.gather_rows_ref(table, idx)
+
+
+def gather_rows(table, idx):
+    """out[i] = table[idx[i]] — the narrow-stream baseline."""
+    return registry.dispatch("gather_rows", table, idx)
+
+
+@registry.register("packed_gather_rows", "pallas",
+                   backends=("pallas", "interpret"),
+                   supports=_gather_supports, priority=10, pass_interpret=True)
+@partial(jax.jit, static_argnames=("pack", "sort", "interpret"))
+def _packed_gather_kernel(table, idx, *, pack: int = 8, sort: bool = True,
+                          interpret: bool = False):
     M = idx.shape[0]
     r = (-M) % pack
     order = jnp.argsort(idx) if sort else jnp.arange(M)
@@ -118,22 +234,62 @@ def packed_gather_rows(table, idx, *, impl: str = "interpret", pack: int = 8,
     if r:
         sidx = jnp.concatenate([sidx, jnp.full((r,), sidx[-1], sidx.dtype)])
     out = _packed_gather(table, sidx, pack=pack, window=table.shape[0],
-                         interpret=(impl == "interpret"))[:M]
+                         interpret=interpret)[:M]
     inv = jnp.argsort(order) if sort else order
     return out[inv]
 
 
-@partial(jax.jit, static_argnames=("scale", "shift", "impl", "block"))
-def instream_scale_reduce(x, *, scale: float = 1.0, shift: float = 0.0,
-                          impl: str = "interpret", block: int = 1024):
-    if impl == "ref":
-        return _ref.instream_scale_reduce_ref(x, scale=scale, shift=shift)
+registry.register("packed_gather_rows", "ref",
+                  backends=("ref", "interpret", "pallas"))(_gather_ref)
+registry.register_blocks("packed_gather_rows", "*", pack=8)
+
+
+def packed_gather_rows(table, idx, *, sort: bool = True, **blocks):
+    """Packed/coalesced indexed stream. With ``sort`` (the temporal
+    coalescer), gathers are issued in index order and unpermuted after.
+    ``pack`` (tuning table, default 8) sets rows per wide flit."""
+    return registry.dispatch("packed_gather_rows", table, idx, sort=sort,
+                             **blocks)
+
+
+# --------------------------------------------------------------------------
+# instream_scale_reduce — in-stream DMA ops (paper C5b)
+# --------------------------------------------------------------------------
+def _instream_supports(req: OpRequest) -> bool:
+    return (len(req.shapes) >= 1 and len(req.shapes[0]) == 2
+            and req.floating())
+
+
+@registry.register("instream_scale_reduce", "pallas",
+                   backends=("pallas", "interpret"),
+                   supports=_instream_supports, priority=10,
+                   pass_interpret=True)
+@partial(jax.jit, static_argnames=("scale", "shift", "block", "interpret"))
+def _instream_kernel(x, *, scale: float = 1.0, shift: float = 0.0,
+                     block: int = 1024, interpret: bool = False):
     M, D = x.shape
     bm = min(block, M)
     xp, padded = _pad_to(x, (bm,), (0,))
     y, s = _instream(xp, scale=scale, shift=shift, block=bm,
-                     interpret=(impl == "interpret"))
+                     interpret=interpret)
     if padded:
         y = y[:M]
         s = s - shift * (xp.shape[0] - M) * D
     return y, s
+
+
+@registry.register("instream_scale_reduce", "ref",
+                   backends=("ref", "interpret", "pallas"))
+@partial(jax.jit, static_argnames=("scale", "shift"))
+def _instream_ref(x, *, scale: float = 1.0, shift: float = 0.0):
+    return _ref.instream_scale_reduce_ref(x, scale=scale, shift=shift)
+
+
+registry.register_blocks("instream_scale_reduce", "*", block=1024)
+
+
+def instream_scale_reduce(x, *, scale: float = 1.0, shift: float = 0.0,
+                          **blocks):
+    """x: (M, D) -> (scale*x + shift, global sum) in one stream pass."""
+    return registry.dispatch("instream_scale_reduce", x, scale=scale,
+                             shift=shift, **blocks)

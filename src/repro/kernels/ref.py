@@ -21,11 +21,16 @@ def gemm_ref(x, w, *, bias=None, scale=1.0, act=None):
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, scale=None):
-    """q: (BH, Sq, D); k, v: (BH, Skv, D). Plain softmax attention."""
+    """q: (BH, Sq, D); k, v: (BK, Skv, D) with BH % BK == 0. Plain softmax
+    attention. GQA (BH = BK*G) is handled by a grouped reshape of q — the
+    shared K/V heads are never materialized per query head."""
     BH, Sq, D = q.shape
-    Skv = k.shape[1]
+    BK, Skv, _ = k.shape
+    assert BH % BK == 0, (q.shape, k.shape)
+    G = BH // BK
     scale = (1.0 / jnp.sqrt(D)) if scale is None else scale
-    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+    qg = q.reshape(BK, G, Sq, D)
+    s = jnp.einsum("bgqd,bkd->bgqk", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if cap:
         s = jnp.tanh(s / cap) * cap
@@ -36,9 +41,10 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, scale=None):
         mask &= qpos >= kpos
     if window:
         mask &= qpos - kpos < window
-    s = jnp.where(mask[None], s, -1e30)
+    s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    out = jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))
+    return out.reshape(BH, Sq, D)
 
 
 def lru_scan_ref(a, b, h0=None):

@@ -27,6 +27,10 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("auto", "ref", "interpret", "pallas"),
+                    help="registry backend for the engine's jitted graphs "
+                         "(default: cfg.kernel_backend / XLA paths)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -34,7 +38,8 @@ def main(argv=None):
         cfg = reduced(cfg)
     params = model_init(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, max_slots=args.slots,
-                         max_len=args.max_len, seed=args.seed)
+                         max_len=args.max_len, seed=args.seed,
+                         kernel_backend=args.kernel_backend)
 
     rng = np.random.default_rng(args.seed)
     reqs = []

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models.layers import Params, apply_norm, dense_init, norm_init, rope, softcap
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
@@ -198,20 +199,21 @@ def attention_forward(p: Params, cfg: ModelConfig, x, *, is_local: bool,
             k = part.act(k, ("batch", None, "heads", None))
             v = part.act(v, ("batch", None, "heads", None))
     window = cfg.window if is_local else 0
-    if part is None and cfg.attention_impl in ("pallas", "pallas_interpret"):
-        # the Pallas TPU kernel (kernels/flash_attention.py) — local path;
-        # the SPMD path uses the numerically-identical XLA flash (tested
-        # equal), since a pallas_call inside pjit would need shard_map
-        from repro.kernels.ops import flash_attention as _pl_fa
+    backend = kdispatch.negotiated_model_backend(cfg.resolved_kernel_backend)
+    if part is None and backend is not None:
+        # registry-dispatched kernel (kernels/flash_attention.py) — local
+        # path; the SPMD path uses the numerically-identical XLA flash
+        # (tested equal), since a pallas_call inside pjit would need
+        # shard_map. Shapes the kernel can't serve negotiate down to ref.
+        from repro.kernels.ops import flash_attention as _reg_fa
         B_, Sq_, K_, G_, D_ = q.shape
         Skv_ = k.shape[1]
         qf = q.transpose(0, 2, 3, 1, 4).reshape(B_ * K_ * G_, Sq_, D_)
         kf = k.transpose(0, 2, 1, 3).reshape(B_ * K_, Skv_, D_)
         vf = v.transpose(0, 2, 1, 3).reshape(B_ * K_, Skv_, D_)
-        of = _pl_fa(qf, kf, vf, causal=causal, window=window,
-                    cap=cfg.attn_softcap, scale=_scale(cfg),
-                    impl=("interpret" if cfg.attention_impl == "pallas_interpret"
-                          else "pallas"))
+        with kdispatch.use_backend(backend):
+            of = _reg_fa(qf, kf, vf, causal=causal, window=window,
+                         cap=cfg.attn_softcap, scale=_scale(cfg))
         out = of.reshape(B_, K_, G_, Sq_, D_).transpose(0, 3, 1, 2, 4)
         out = out.astype(q.dtype)
     else:

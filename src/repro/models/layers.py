@@ -12,6 +12,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kdispatch
+
 Params = dict[str, Any]
 
 
@@ -90,20 +92,49 @@ def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
     raise ValueError(kind)
 
 
+def dense(x: jnp.ndarray, w: jnp.ndarray, *, act: str | None = None
+          ) -> jnp.ndarray:
+    """Linear layer (optionally activation-fused) through the kernel registry.
+
+    Under an explicit ``use_backend`` kernel scope this routes the matmul
+    through ``ops.gemm`` — the Pallas streaming GEMM with its fused in-stream
+    epilogue (paper C5b) — with leading dims flattened into the row dim.
+    Otherwise it is the plain jnp matmul, bit-identical to the historical
+    path.
+    """
+    if kdispatch.kernel_scope_active() and x.ndim >= 2:
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        y = ops.gemm(x.reshape(-1, x.shape[-1]), w, act=act)
+        return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    y = x @ w
+    return _act(y, act) if act else y
+
+
 def apply_mlp(p: Params, x: jnp.ndarray, act: str, gated: bool,
               compute_dtype, part=None) -> jnp.ndarray:
     xc = x.astype(compute_dtype)
+    if part is None:
+        # local path: registry-dispatched dense (kernel backends fuse the
+        # activation into the GEMM epilogue)
+        wu = p["up"]["kernel"].astype(compute_dtype)
+        if gated:
+            h = dense(xc, p["gate"]["kernel"].astype(compute_dtype),
+                      act=act) * dense(xc, wu)
+        else:
+            h = dense(xc, wu, act=act)
+        out = dense(h.astype(compute_dtype),
+                    p["down"]["kernel"].astype(compute_dtype))
+        return out.astype(x.dtype)
     up = xc @ p["up"]["kernel"].astype(compute_dtype)
-    if part is not None:
-        up = part.act(up, ("batch",) + (None,) * (up.ndim - 2) + ("mlp",))
+    up = part.act(up, ("batch",) + (None,) * (up.ndim - 2) + ("mlp",))
     if gated:
         gate = xc @ p["gate"]["kernel"].astype(compute_dtype)
         h = _act(gate, act) * up
     else:
         h = _act(up, act)
     out = h @ p["down"]["kernel"].astype(compute_dtype)
-    if part is not None:
-        out = part.act(out, ("batch",) + (None,) * (out.ndim - 1))
+    out = part.act(out, ("batch",) + (None,) * (out.ndim - 1))
     return out.astype(x.dtype)
 
 

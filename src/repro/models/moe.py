@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import ops as kops
 from repro.models.layers import Params, apply_mlp, dense_init, mlp_init
 
 
@@ -88,7 +90,15 @@ def _dispatch_sort(x, gate, idx, C: int, E: int):
     keep = seg_pos < C
     dest = jnp.where(keep, sorted_e * C + seg_pos, E * C)  # overflow row dropped
     xe_flat = jnp.zeros((E * C + 1, x.shape[-1]), x.dtype)
-    xe_flat = xe_flat.at[dest].set(x[sorted_tok])
+    # the token-row stream is an indexed gather — the paper's packed
+    # irregular streams. Registry-dispatched only under an explicit
+    # use_backend scope (forward/inference): the Pallas gather defines no
+    # JVP, and ambient auto-detection must never reroute a training graph.
+    if kdispatch.kernel_scope_active():
+        gathered = kops.gather_rows(x, sorted_tok)
+    else:
+        gathered = x[sorted_tok]
+    xe_flat = xe_flat.at[dest].set(gathered)
     xe = xe_flat[: E * C].reshape(E, C, x.shape[-1])
     meta = (dest, sorted_tok, order)
     return xe, meta
@@ -248,11 +258,11 @@ def moe_forward_ep(p: Params, cfg: ModelConfig, x, *, compute_dtype, part):
             y = jax.lax.psum(y, "model")
         return y, aux_g
 
-    y, aux_g = jax.shard_map(
+    from repro.core.collectives import shard_map_compat
+    y, aux_g = shard_map_compat(
         body, mesh=mesh,
         in_specs=(bspec, P(None, None), wspec, wspec, wspec),
-        out_specs=(bspec, P(bspec[0] if G > 1 else None)),
-        check_vma=False)(xc, router, wg, wu, wd)
+        out_specs=(bspec, P(bspec[0] if G > 1 else None)))(xc, router, wg, wu, wd)
     return y.reshape(B, S, d).astype(x.dtype), aux_g.mean()
 
 

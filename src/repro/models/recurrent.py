@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models.layers import Params, causal_conv1d, dense_init
 
 
@@ -28,6 +29,14 @@ def diag_scan(a, b, h0, chunk: int):
     Returns (h (B, L, D), h_last (B, D)). Chunked: memory ~ O(B*chunk*D).
     """
     B, L, D = a.shape
+    if kdispatch.kernel_scope_active():
+        # registry-dispatched Pallas scan (forward/inference scopes). The
+        # kernel runs from a zero state, so the carry-in is absorbed into the
+        # first step: h_1 = a_1*h_0 + b_1.
+        from repro.kernels import ops as kops
+        b0 = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+        h = kops.lru_scan(a, b0, chunk=chunk)
+        return h, h[:, -1]
     chunk = min(chunk, L)
     n = -(-L // chunk)
     pad = n * chunk - L

@@ -12,6 +12,7 @@ whole period, with per-position parameter slices stacked on the leading axis.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any
 
@@ -19,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import recurrent as rec_mod
@@ -345,6 +347,20 @@ def logits_fn(params, cfg: ModelConfig, x, part=None):
     return logits
 
 
+def _model_kernel_scope(cfg: ModelConfig, part):
+    """Registry scope for a whole model graph: cfg.resolved_kernel_backend
+    (or an enclosing use_backend scope, which wins) routes every kernelized
+    layer — attention, dense/MLP, recurrences, MoE gathers — through the op
+    registry. Local path only: under SPMD any kernel scope is *neutralized*
+    (not just skipped) so no layer traces a pallas_call inside pjit."""
+    if part is not None:
+        return kdispatch.spmd_xla_scope()
+    be = kdispatch.negotiated_model_backend(cfg.resolved_kernel_backend)
+    if be is not None:
+        return kdispatch.use_backend(be)
+    return contextlib.nullcontext()
+
+
 def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None, frames=None,
             cache=None, part=None):
     """Full-sequence forward (training / prefill).
@@ -353,6 +369,13 @@ def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None, frames=None,
     (B, S_enc, d) for enc-dec. cache: decode-cache template to fill (prefill).
     Returns (hidden (B, S_tot, d), new_cache, aux_loss).
     """
+    with _model_kernel_scope(cfg, part):
+        return _forward(params, cfg, tokens, extra_embeds=extra_embeds,
+                        frames=frames, cache=cache, part=part)
+
+
+def _forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+             frames=None, cache=None, part=None):
     x = embed_tokens(params, cfg, tokens, extra_embeds)
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)[None, :]
@@ -375,6 +398,11 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None):
 
     Returns (logits (B, 1, V), new_cache).
     """
+    with _model_kernel_scope(cfg, part):
+        return _decode_step(params, cfg, cache, tokens, pos, part=part)
+
+
+def _decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None):
     x = embed_tokens(params, cfg, tokens)
     if cfg.learned_pos and "pos_embed" in params:
         tab = params["pos_embed"]["table"]

@@ -16,6 +16,7 @@ occasional recompile here.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models import decode_step, forward, logits_fn
 from repro.models.cache import init_cache
 
@@ -66,11 +68,21 @@ def _tree_write_slot(big: PyTree, small: PyTree, slot: int) -> PyTree:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *, max_slots: int = 4,
                  max_len: int = 512, eos_id: int | None = None, seed: int = 0,
-                 part=None):
+                 part=None, kernel_backend: str | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
         self.part = part
+        # kernel selection for the engine's jitted graphs: explicit arg >
+        # cfg.kernel_backend; block tuning comes from the strategy when
+        # serving under a Partitioner. Fixed for the engine's lifetime (the
+        # scope must be active whenever a prefill/decode graph traces).
+        self.kernel_backend = (kernel_backend or cfg.resolved_kernel_backend
+                               or None)
+        strat = getattr(part, "strategy", None)
+        self._kernel_blocks = (kdispatch.blocks_from_pairs(strat.kernel_blocks)
+                               if strat is not None and strat.kernel_blocks
+                               else None)
         self.rng = jax.random.PRNGKey(seed)
         self.cache = init_cache(cfg, max_slots, max_len)
         # slot bookkeeping (host side)
@@ -86,6 +98,17 @@ class ServeEngine:
         self.stats = {"prefills": 0, "decode_steps": 0, "prefill_recompiles": 0}
 
     # ------------------------------------------------------------------
+    def _kernel_scope(self):
+        """Backend/block-tuning scope for prefill and decode graphs. SPMD
+        serving never opens a kernel scope: forward/decode_step would
+        neutralize it anyway (no pallas_call inside pjit)."""
+        if self.part is not None:
+            return contextlib.nullcontext()
+        if self.kernel_backend or self._kernel_blocks:
+            return kdispatch.use_backend(self.kernel_backend,
+                                         blocks=self._kernel_blocks)
+        return contextlib.nullcontext()
+
     def _decode_all(self, params, cache, tokens, pos):
         """One decode step over the whole slot pool (per-slot positions)."""
         logits, cache = decode_step(params, self.cfg, cache, tokens, pos,
@@ -141,8 +164,9 @@ class ServeEngine:
                       if req.frames is not None else None)
             extra = (jnp.asarray(req.extra_embeds)[None]
                      if req.extra_embeds is not None else None)
-            logits, slot_cache = fn(self.params, jnp.asarray(prompt),
-                                    frames, extra)
+            with self._kernel_scope():
+                logits, slot_cache = fn(self.params, jnp.asarray(prompt),
+                                        frames, extra)
             self.cache = _tree_write_slot(self.cache, slot_cache, slot)
             first = int(self._sample(logits, np.asarray(
                 [req.temperature]))[0])
@@ -177,8 +201,9 @@ class ServeEngine:
             if self.active[slot]:
                 tokens[slot, 0] = self.results[self.slot_uid[slot]].tokens[-1]
         pos = jnp.asarray(self.slot_pos)
-        logits, self.cache = self._decode_fn(self.params, self.cache,
-                                             jnp.asarray(tokens), pos)
+        with self._kernel_scope():
+            logits, self.cache = self._decode_fn(self.params, self.cache,
+                                                 jnp.asarray(tokens), pos)
         nxt = self._sample(logits, self.slot_temp)
         self.stats["decode_steps"] += 1
         for slot in range(self.max_slots):

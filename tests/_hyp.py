@@ -1,0 +1,30 @@
+"""Hypothesis shim: the real library when installed, a skip-only fallback
+otherwise (minimal containers ship without a hypothesis wheel; property tests
+skip rather than killing collection for the whole suite)."""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        def deco(f):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["given", "settings", "st"]

@@ -3,8 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.data import MixtureDataset, Prefetcher, SyntheticLM
 

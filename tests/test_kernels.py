@@ -1,15 +1,24 @@
-"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret=True on CPU)
-against its pure-jnp oracle in ref.py."""
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret backend on
+CPU) against its pure-jnp oracle in ref.py, dispatched through the registry
+(the whole module runs inside a ``use_backend("interpret")`` scope)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.kernels import ops, ref
+from repro.kernels.dispatch import use_backend
+
+
+# module-scoped: Hypothesis' function_scoped_fixture health check rejects
+# function-scoped autouse fixtures around @given tests
+@pytest.fixture(autouse=True, scope="module")
+def _interpret_backend():
+    with use_backend("interpret"):
+        yield
 
 KEY = jax.random.PRNGKey(0)
 
@@ -28,7 +37,7 @@ def _rand(shape, dtype=jnp.float32, key=KEY, scale=1.0):
 def test_gemm_shapes_dtypes(m, k, n, dtype):
     x = _rand((m, k), dtype)
     w = _rand((k, n), dtype, jax.random.PRNGKey(1))
-    got = ops.gemm(x, w, impl="interpret")
+    got = ops.gemm(x, w)
     want = ref.gemm_ref(x, w)
     tol = 1e-4 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -41,7 +50,7 @@ def test_gemm_fused_epilogue(act, scale):
     x = _rand((64, 48))
     w = _rand((48, 96), key=jax.random.PRNGKey(1))
     b = _rand((96,), key=jax.random.PRNGKey(2))
-    got = ops.gemm(x, w, bias=b, scale=scale, act=act, impl="interpret")
+    got = ops.gemm(x, w, bias=b, scale=scale, act=act)
     want = ref.gemm_ref(x, w, bias=b, scale=scale, act=act)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
@@ -52,7 +61,7 @@ def test_gemm_block_shapes():
     w = _rand((100, 150), key=jax.random.PRNGKey(1))
     want = ref.gemm_ref(x, w)
     for bm, bn, bk in [(64, 64, 64), (128, 256, 32), (32, 32, 128)]:
-        got = ops.gemm(x, w, impl="interpret", block_m=bm, block_n=bn,
+        got = ops.gemm(x, w, block_m=bm, block_n=bn,
                        block_k=bk)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
@@ -70,8 +79,7 @@ def test_flash_attention_shapes(sq, skv, d, causal):
     q = _rand((4, sq, d), scale=0.5)
     k = _rand((4, skv, d), key=jax.random.PRNGKey(1), scale=0.5)
     v = _rand((4, skv, d), key=jax.random.PRNGKey(2))
-    got = ops.flash_attention(q, k, v, causal=causal, impl="interpret",
-                              block_q=32, block_k=32)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
     want = ref.flash_attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
@@ -84,7 +92,7 @@ def test_flash_attention_window_softcap(window, cap):
     k = _rand((2, 96, 32), key=jax.random.PRNGKey(1), scale=0.5)
     v = _rand((2, 96, 32), key=jax.random.PRNGKey(2))
     got = ops.flash_attention(q, k, v, causal=True, window=window, cap=cap,
-                              impl="interpret", block_q=32, block_k=32)
+                              block_q=32, block_k=32)
     want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
                                    cap=cap)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -97,8 +105,7 @@ def test_flash_attention_gqa(g):
     q = _rand((2 * g, 64, 16), scale=0.5)
     k = _rand((2, 64, 16), key=jax.random.PRNGKey(1), scale=0.5)
     v = _rand((2, 64, 16), key=jax.random.PRNGKey(2))
-    got = ops.flash_attention(q, k, v, causal=True, impl="interpret",
-                              block_q=32, block_k=32)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
     kr, vr = jnp.repeat(k, g, 0), jnp.repeat(v, g, 0)
     want = ref.flash_attention_ref(q, kr, vr, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -110,7 +117,7 @@ def test_flash_attention_scale():
     k = _rand((1, 32, 16), key=jax.random.PRNGKey(1), scale=0.5)
     v = _rand((1, 32, 16), key=jax.random.PRNGKey(2))
     got = ops.flash_attention(q, k, v, causal=True, scale=0.0833,
-                              impl="interpret", block_q=16, block_k=16)
+                              block_q=16, block_k=16)
     want = ref.flash_attention_ref(q, k, v, causal=True, scale=0.0833)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
@@ -124,7 +131,7 @@ def test_flash_attention_scale():
 def test_lru_scan_shapes(b, l, d):
     a = jax.random.uniform(KEY, (b, l, d), minval=0.5, maxval=0.999)
     x = _rand((b, l, d), key=jax.random.PRNGKey(1))
-    got = ops.lru_scan(a, x, impl="interpret")
+    got = ops.lru_scan(a, x)
     want = ref.lru_scan_ref(a, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
@@ -135,7 +142,7 @@ def test_lru_scan_chunking_invariant(chunk):
     """Chunked kernel == unchunked reference for any chunk length."""
     a = jax.random.uniform(KEY, (2, 100, 64), minval=0.3, maxval=0.99)
     x = _rand((2, 100, 64), key=jax.random.PRNGKey(1))
-    got = ops.lru_scan(a, x, impl="interpret", chunk=chunk)
+    got = ops.lru_scan(a, x, chunk=chunk)
     want = ref.lru_scan_ref(a, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
@@ -150,7 +157,7 @@ def test_lru_scan_chunking_invariant(chunk):
 def test_packed_gather(rows, width, m, pack):
     table = _rand((rows, width))
     idx = jax.random.randint(KEY, (m,), 0, rows)
-    got = ops.packed_gather_rows(table, idx, impl="interpret", pack=pack)
+    got = ops.packed_gather_rows(table, idx, pack=pack)
     want = ref.gather_rows_ref(table, idx)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -158,7 +165,7 @@ def test_packed_gather(rows, width, m, pack):
 def test_packed_gather_unsorted():
     table = _rand((128, 16))
     idx = jax.random.randint(KEY, (50,), 0, 128)
-    got = ops.packed_gather_rows(table, idx, impl="interpret", sort=False)
+    got = ops.packed_gather_rows(table, idx, sort=False)
     want = ref.gather_rows_ref(table, idx)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -170,7 +177,7 @@ def test_packed_gather_property(idx_list):
     (duplicates, any order, any length)."""
     table = _rand((64, 8))
     idx = jnp.asarray(idx_list, jnp.int32)
-    got = ops.packed_gather_rows(table, idx, impl="interpret")
+    got = ops.packed_gather_rows(table, idx)
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(table)[np.asarray(idx)])
 
@@ -182,8 +189,7 @@ def test_packed_gather_property(idx_list):
 @pytest.mark.parametrize("scale,shift", [(1.0, 0.0), (2.5, -1.0)])
 def test_instream_scale_reduce(m, d, scale, shift):
     x = _rand((m, d))
-    got_y, got_s = ops.instream_scale_reduce(x, scale=scale, shift=shift,
-                                             impl="interpret")
+    got_y, got_s = ops.instream_scale_reduce(x, scale=scale, shift=shift)
     want_y, want_s = ref.instream_scale_reduce_ref(x, scale=scale, shift=shift)
     np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
                                rtol=1e-5, atol=1e-5)
@@ -195,8 +201,7 @@ def test_instream_scale_reduce(m, d, scale, shift):
 @given(st.floats(-4, 4), st.floats(-2, 2))
 def test_instream_property(scale, shift):
     x = _rand((33, 17))
-    got_y, got_s = ops.instream_scale_reduce(x, scale=scale, shift=shift,
-                                             impl="interpret")
+    got_y, got_s = ops.instream_scale_reduce(x, scale=scale, shift=shift)
     np.testing.assert_allclose(np.asarray(got_y),
                                np.asarray(x) * scale + shift,
                                rtol=1e-4, atol=1e-4)
