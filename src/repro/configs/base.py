@@ -114,6 +114,17 @@ class ModelConfig:
                                   # XLA cost_analysis counts while-bodies once.
     attn_chunk: int = 1024        # q-chunk for the jnp flash attention
     loss_chunk: int = 0           # 0 => full logits; >0 => chunked vocab loss
+    # paged-KV serving (repro.serve.engine). ``paged_kv`` selects the
+    # block-pool cache layout for full-attention layers (local windows,
+    # recurrent states, and cross caches stay dense); ``page_size`` is the
+    # KV rows per block; ``prefill_chunk`` is the fixed token count of the
+    # one compiled chunked-prefill step; ``max_blocks`` sizes the global
+    # block pool (0 => the engine derives max_slots * ceil(max_len /
+    # page_size) + 1, i.e. dense-equivalent capacity plus the null block).
+    paged_kv: bool = False
+    page_size: int = 16
+    prefill_chunk: int = 64
+    max_blocks: int = 0
     # kernel selection flows through the backend registry
     # (repro.kernels.dispatch): "" keeps the pure-XLA paths (the only option
     # for training — kernel backends are forward/inference paths); "auto"
@@ -138,6 +149,8 @@ class ModelConfig:
             raise ValueError(
                 f"kernel_backend={self.kernel_backend!r}; expected '', "
                 "'auto', 'ref', 'interpret', or 'pallas'")
+        if self.page_size < 1 or self.prefill_chunk < 1:
+            raise ValueError("page_size and prefill_chunk must be >= 1")
         if self.attention_impl not in self._ATTENTION_IMPL_MAP:
             raise ValueError(
                 f"attention_impl={self.attention_impl!r}; expected 'xla', "

@@ -26,9 +26,11 @@ from repro.kernels.instream import instream_scale_reduce as _instream
 from repro.kernels.lru_scan import lru_scan as _lru
 from repro.kernels.packed_gather import gather_rows as _gather
 from repro.kernels.packed_gather import packed_gather_rows as _packed_gather
+from repro.kernels.paged_attention import paged_attention as _pa
 
 __all__ = ["flash_attention", "gather_rows", "gemm", "instream_scale_reduce",
-           "lru_scan", "packed_gather_rows", "registry", "use_backend"]
+           "lru_scan", "packed_gather_rows", "paged_attention", "registry",
+           "use_backend"]
 
 
 def _pad_to(x, mults, axes):
@@ -148,6 +150,54 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """
     return registry.dispatch("flash_attention", q, k, v, causal=causal,
                              window=window, cap=cap, scale=scale, **blocks)
+
+
+# --------------------------------------------------------------------------
+# paged_attention — block-pool KV decode attention (serving)
+# --------------------------------------------------------------------------
+def _pa_supports(req: OpRequest) -> bool:
+    if len(req.shapes) < 5:
+        return False
+    if len(req.shapes[0]) != 4 or any(len(s) != 4 for s in req.shapes[1:3]):
+        return False
+    (B, K, G, D) = req.shapes[0]
+    (N, page, Kp, Dp) = req.shapes[1]
+    # kernel layout: pool heads/dims must match q, and the head dim must
+    # fill at least one sublane — else negotiate down to the gather oracle
+    return (Kp == K and Dp == D and D >= 8
+            and all(("float" in d) or ("bf16" in d) for d in req.dtypes[:3])
+            and all("int" in d for d in req.dtypes[3:5]))
+
+
+@registry.register("paged_attention", "pallas",
+                   backends=("pallas", "interpret"), supports=_pa_supports,
+                   priority=10, pass_interpret=True)
+@partial(jax.jit, static_argnames=("scale", "cap", "interpret"))
+def _pa_kernel(q, k_pool, v_pool, block_tables, lengths, *,
+               scale: float | None = None, cap: float = 0.0,
+               interpret: bool = False):
+    return _pa(q, k_pool, v_pool, block_tables, lengths, scale=scale,
+               cap=cap, interpret=interpret)
+
+
+@registry.register("paged_attention", "ref",
+                   backends=("ref", "interpret", "pallas"))
+@partial(jax.jit, static_argnames=("scale", "cap"))
+def _pa_ref(q, k_pool, v_pool, block_tables, lengths, *,
+            scale: float | None = None, cap: float = 0.0):
+    return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                                    scale=scale, cap=cap)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    scale: float | None = None, cap: float = 0.0, **blocks):
+    """Block-pool decode attention. q: (B, K, G, D) one token per slot;
+    k/v pools: (N, page, K, D); block_tables: (B, P) int32; lengths: (B,)
+    int32 valid tokens per slot. Pool layouts the kernel can't express
+    negotiate down to the gather-based oracle."""
+    return registry.dispatch("paged_attention", q, k_pool, v_pool,
+                             block_tables, lengths, scale=scale, cap=cap,
+                             **blocks)
 
 
 # --------------------------------------------------------------------------

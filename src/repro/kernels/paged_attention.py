@@ -1,0 +1,115 @@
+"""Paged decode-attention Pallas TPU kernel (block-pool KV cache).
+
+The serving cache is a global pool of fixed-size KV blocks — the software
+analogue of Occamy's banked TCDM: many independent in-flight streams each own
+a handful of fixed-size blocks instead of a statically reserved ``max_len``
+region. Each decode query reads its sequence through a per-slot *block table*
+(``(B, P)`` int32 of pool block ids, position ``p`` lives at row ``p %
+page_size`` of block ``table[b, p // page_size]``).
+
+Kernel layout: q ``(B, K, G, D)`` (one token per slot, GQA groups G), pools
+``(N, page, K, D)``. Grid ``(B, K, P)`` with the page dimension innermost and
+sequential; the block table and sequence lengths ride in as *scalar-prefetch*
+operands (``pltpu.PrefetchScalarGridSpec``) so the K/V BlockSpec index maps
+can chase the table — the pool block for grid step ``(b, k, j)`` is
+``table[b, j]``, fetched by DMA like any dense operand. Running ``(m, l,
+acc)`` live in VMEM scratch across the page pass (FlashAttention-style online
+softmax); pages wholly beyond the sequence length are skipped with
+``pl.when``, so decode cost scales with *allocated* pages, not table capacity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, page: int, n_pages: int,
+               scale: float, cap: float, out_dtype):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    base = j * page
+
+    # pages beyond the sequence do no work: decode cost follows the block
+    # table's allocated prefix, not its (max_len-sized) capacity
+    @pl.when(base < length)
+    def _page():
+        q = q_ref[0, 0]                              # (G, D)
+        k = k_ref[0, :, 0, :]                        # (page, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)[:, None]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-37)).astype(out_dtype)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    scale: float | None = None, cap: float = 0.0,
+                    interpret: bool = False):
+    """q: (B, K, G, D) single decode token per slot; k/v pools
+    (N, page, K, D); block_tables: (B, P) int32 pool block ids; lengths:
+    (B,) int32 valid tokens per slot (current token included). Returns
+    (B, K, G, D)."""
+    B, K, G, D = q.shape
+    N, page = k_pool.shape[:2]
+    P = block_tables.shape[1]
+    scale = (1.0 / (D ** 0.5)) if scale is None else scale
+    kernel = functools.partial(
+        _pa_kernel, page=page, n_pages=P, scale=scale, cap=cap,
+        out_dtype=q.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # block_tables, lengths
+        grid=(B, K, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k, j, tbl, ln: (b, k, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, k, j, tbl, ln: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -47,6 +47,30 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, scale=None):
     return out.reshape(BH, Sq, D)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        scale=None, cap=0.0):
+    """Gather-based paged decode attention. q: (B, K, G, D) one token per
+    slot; k/v pools: (N, page, K, D); block_tables: (B, P) int32 pool block
+    ids; lengths: (B,) int32 valid tokens (current included). The slot's
+    sequence is materialized by gathering its pages — row ``p`` of the
+    logical sequence is ``pool[table[b, p // page], p % page]``."""
+    B, K, G, D = q.shape
+    page = k_pool.shape[1]
+    P = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, P * page, K, D)
+    v = v_pool[block_tables].reshape(B, P * page, K, D)
+    scale = (1.0 / jnp.sqrt(D)) if scale is None else scale
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    valid = jnp.arange(P * page)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def lru_scan_ref(a, b, h0=None):
     """Diagonal recurrence h_t = a_t*h_{t-1} + b_t. a, b: (B, L, D)."""
     B, L, D = a.shape

@@ -31,6 +31,18 @@ def main(argv=None):
                     choices=("auto", "ref", "interpret", "pallas"),
                     help="registry backend for the engine's jitted graphs "
                          "(default: cfg.kernel_backend / XLA paths)")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="block-pool (paged) KV cache layout "
+                         "(default: cfg.paged_kv; --no-paged forces dense)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV rows per block (default: cfg.page_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill token count (default: "
+                         "cfg.prefill_chunk)")
+    ap.add_argument("--max-blocks", type=int, default=None,
+                    help="global KV block-pool size (default: dense-"
+                         "equivalent capacity)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -39,7 +51,10 @@ def main(argv=None):
     params = model_init(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, max_slots=args.slots,
                          max_len=args.max_len, seed=args.seed,
-                         kernel_backend=args.kernel_backend)
+                         kernel_backend=args.kernel_backend,
+                         paged=args.paged, page_size=args.page_size,
+                         prefill_chunk=args.prefill_chunk,
+                         max_blocks=args.max_blocks)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -68,7 +83,11 @@ def main(argv=None):
         "new_tokens": new_tokens, "wall_s": round(dt, 2),
         "tok_per_s": round(new_tokens / dt, 1),
         "decode_steps": engine.stats["decode_steps"],
+        "prefill_chunks": engine.stats["prefill_chunks"],
         "prefill_recompiles": engine.stats["prefill_recompiles"],
+        "paged": engine.paged,
+        "kv_bytes_per_request": (engine.stats["kv_bytes_alloc"]
+                                 // max(len(results), 1)),
     }, indent=1))
     assert all(r.finish_reason for r in results), "unfinished requests"
 

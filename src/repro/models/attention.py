@@ -232,7 +232,7 @@ def attention_forward(p: Params, cfg: ModelConfig, x, *, is_local: bool,
 
 def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
                      is_local: bool, pos, compute_dtype, part=None,
-                     cross: bool = False):
+                     cross: bool = False, active=None, block_tables=None):
     """Single-token decode against a cache.
 
     cache: {"k": (B, S_buf, K, D), "v": ..., ["slot_pos": (S_buf,) implicit]}
@@ -241,6 +241,14 @@ def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
     ``pos``: absolute position of the incoming token — scalar int32 (all
     sequences aligned, the dry-run path) or (B,) int32 (per-slot positions,
     the continuous-batching serve path).
+
+    ``block_tables`` ((B, P) int32) selects the *paged* layout: cache k/v are
+    global (n_blocks, page, K, D) pools and position ``p`` of slot ``b``
+    lives at row ``p % page`` of block ``tables[b, p // page]``; the read
+    dispatches through the ``paged_attention`` registry op. ``active``
+    ((B,) bool) gates cache writes per slot — inactive/prefilling slots
+    route their write out of bounds (dropped), so a pooled decode step never
+    scribbles on a slot that is not in the decode phase.
     Returns (out, new_cache).
     """
     vec_pos = jnp.ndim(pos) > 0  # per-slot positions (continuous batching)
@@ -269,6 +277,11 @@ def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
             qf = rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta)
             q = qf.reshape(B, 1, K, G, hd)
             k = rope(k, posb, cfg.rope_theta)
+        if block_tables is not None:
+            posv = pos if vec_pos else jnp.full((B,), pos, jnp.int32)
+            return _paged_decode(p, cfg, q, k, v, cache, pos=posv,
+                                 active=active, block_tables=block_tables,
+                                 compute_dtype=compute_dtype, x_dtype=x.dtype)
         S_buf = cache["k"].shape[1]
         is_ring = is_local and cfg.window and S_buf == cfg.window
         if is_ring:
@@ -288,10 +301,14 @@ def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
             if vec_pos:
                 slot_pos = jnp.broadcast_to(slot_pos[None, :], (B, S_buf))
         if vec_pos:
-            # per-slot write positions -> batched scatter
+            # per-slot write positions -> batched scatter; slots not in the
+            # decode phase route their write out of bounds (dropped)
             bidx = jnp.arange(B)
-            k_all = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-            v_all = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+            slot_w = slot if active is None else jnp.where(active, slot, S_buf)
+            k_all = cache["k"].at[bidx, slot_w].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            v_all = cache["v"].at[bidx, slot_w].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
         else:
             k_all = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
@@ -317,5 +334,146 @@ def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
                      v_all.astype(compute_dtype),
                      preferred_element_type=jnp.float32)
     out = out.reshape(B, 1, H * hd).astype(compute_dtype)
+    out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
+    return out, new_cache
+
+
+def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
+                  block_tables, compute_dtype, x_dtype):
+    """Single-token decode against the block-pool (paged) KV layout.
+
+    q: (B, 1, K, G, D), k/v: (B, 1, K, D) — already projected, normed, and
+    RoPE'd by ``attention_decode``; pos: (B,) int32. cache:
+    {"k"/"v": (N, page, K, D)} global pools. The new token's K/V scatter
+    into the slot's current block (inactive slots dropped via an
+    out-of-bounds block id); the read gathers the slot's pages through
+    ``ops.paged_attention``.
+    """
+    B = q.shape[0]
+    hd, H = cfg.resolved_head_dim, cfg.n_heads
+    pool_k, pool_v = cache["k"], cache["v"]
+    n_blocks, page = pool_k.shape[:2]
+    blk = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                              axis=1)[:, 0]
+    if active is not None:
+        blk = jnp.where(active, blk, n_blocks)  # OOB -> write dropped
+    row = pos % page
+    pool_k = pool_k.at[blk, row].set(k[:, 0].astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[blk, row].set(v[:, 0].astype(pool_v.dtype), mode="drop")
+    # registry read: an enclosing use_backend scope / cfg.kernel_backend
+    # routes through the Pallas kernel; otherwise pin the gather-based ref
+    # oracle (the XLA path) — ambient selection (env var / TPU auto) must
+    # not reroute a model graph without explicit opt-in
+    from repro.kernels.ops import paged_attention as _reg_pa
+    be = (kdispatch.negotiated_model_backend(cfg.resolved_kernel_backend)
+          or "ref")
+    with kdispatch.use_backend(be):
+        out = _reg_pa(q[:, 0], pool_k, pool_v, block_tables, pos + 1,
+                      scale=_scale(cfg), cap=cfg.attn_softcap)
+    out = out.reshape(B, 1, H * hd).astype(compute_dtype)
+    out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x_dtype)
+    return out, {"k": pool_k, "v": pool_v}
+
+
+def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
+                     is_local: bool, pos, n_valid, slot, compute_dtype,
+                     block_tables=None):
+    """Extend ONE slot's cache by up to T tokens (chunked prefill).
+
+    x: (1, T, d) tokens at absolute positions ``pos .. pos+T-1``; the first
+    ``n_valid`` are real, the rest are ragged-tail padding — their cache
+    writes are dropped (out-of-bounds scatter) and their outputs are junk
+    that the caller slices off. ``cache`` is the POOL entry: dense
+    ``(B, S_buf, K, D)`` buffers, or paged ``(n_blocks, page, K, D)`` pools
+    with ``block_tables`` ((B, P) int32). ``slot`` is this request's slot.
+
+    Attention reads combine a pre-write snapshot of the slot's cache (old
+    positions ``< pos``) with the chunk's own K/V under an intra-chunk
+    causal (and sliding-window) mask — so ring buffers stay exact even when
+    the chunk wraps the window. Returns (out (1, T, d), new_cache).
+    """
+    T = x.shape[1]
+    hd, H, K = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["q_proj"]["kernel"].astype(compute_dtype)).reshape(1, T, K, G, hd)
+    k = (xc @ p["k_proj"]["kernel"].astype(compute_dtype)).reshape(1, T, K, hd)
+    v = (xc @ p["v_proj"]["kernel"].astype(compute_dtype)).reshape(1, T, K, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    positions = pos + jnp.arange(T, dtype=jnp.int32)          # (T,) absolute
+    if cfg.use_rope:
+        qf = rope(q.reshape(1, T, H, hd), positions[None], cfg.rope_theta)
+        q = qf.reshape(1, T, K, G, hd)
+        k = rope(k, positions[None], cfg.rope_theta)
+    i = jnp.arange(T)
+    valid_q = i < n_valid
+
+    if block_tables is not None:
+        # paged pools: scatter the chunk rows through the slot's block table
+        pool_k, pool_v = cache["k"], cache["v"]
+        n_blocks, page = pool_k.shape[:2]
+        n_pages = block_tables.shape[1]
+        table_row = jax.lax.dynamic_slice(
+            block_tables, (slot, 0), (1, n_pages))[0]         # (P,)
+        blk = table_row[positions // page]
+        blk_w = jnp.where(valid_q, blk, n_blocks)             # pads dropped
+        new_k = pool_k.at[blk_w, positions % page].set(
+            k[0].astype(pool_k.dtype), mode="drop")
+        new_v = pool_v.at[blk_w, positions % page].set(
+            v[0].astype(pool_v.dtype), mode="drop")
+        new_cache = {"k": new_k, "v": new_v}
+        # pre-write snapshot of the slot's logical sequence
+        k_old = pool_k[table_row].reshape(1, n_pages * page, K, hd)
+        v_old = pool_v[table_row].reshape(1, n_pages * page, K, hd)
+        old_pos = jnp.arange(n_pages * page)                  # absolute
+    else:
+        S_buf = cache["k"].shape[1]
+        is_ring = is_local and cfg.window and S_buf == cfg.window
+        k_slot = jax.lax.dynamic_slice(cache["k"], (slot, 0, 0, 0),
+                                       (1, S_buf, K, hd))
+        v_slot = jax.lax.dynamic_slice(cache["v"], (slot, 0, 0, 0),
+                                       (1, S_buf, K, hd))
+        k_old, v_old = k_slot, v_slot
+        j = jnp.arange(S_buf)
+        if is_ring:
+            # ring slot j held absolute position (pos-1) - ((pos-1-j) mod W)
+            # before this chunk; only the last min(W, n_valid) chunk rows
+            # are written (earlier rows would be overwritten by the wrap)
+            old_pos = (pos - 1) - jnp.mod(pos - 1 - j, S_buf)
+            w_ok = valid_q & (i >= n_valid - S_buf)
+            rows = jnp.where(w_ok, positions % S_buf, S_buf)
+        else:
+            old_pos = j
+            rows = jnp.where(valid_q, positions, S_buf)
+        k_new = k_slot.at[0, rows].set(k[0].astype(k_slot.dtype), mode="drop")
+        v_new = v_slot.at[0, rows].set(v[0].astype(v_slot.dtype), mode="drop")
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                              (slot, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                              (slot, 0, 0, 0)),
+        }
+
+    # scores over [old snapshot | chunk] keys; masks are (T, S_old) / (T, T)
+    mask_old = ((old_pos >= 0) & (old_pos < pos))[None, :]
+    mask_old = jnp.broadcast_to(mask_old, (T, old_pos.shape[0]))
+    mask_new = i[None, :] <= i[:, None]                       # intra-chunk
+    if is_local and cfg.window:
+        mask_old = mask_old & (old_pos[None, :] > positions[:, None] - cfg.window)
+        mask_new = mask_new & (i[:, None] - i[None, :] < cfg.window)
+    s_old = jnp.einsum("btkgd,bskd->bkgts", q, k_old.astype(compute_dtype),
+                       preferred_element_type=jnp.float32) * _scale(cfg)
+    s_new = jnp.einsum("btkgd,bskd->bkgts", q, k.astype(compute_dtype),
+                       preferred_element_type=jnp.float32) * _scale(cfg)
+    s = softcap(jnp.concatenate([s_old, s_new], axis=-1), cfg.attn_softcap)
+    mask = jnp.concatenate([mask_old, mask_new], axis=-1)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    vv = jnp.concatenate([v_old, v], axis=1).astype(compute_dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", w.astype(compute_dtype), vv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(1, T, H * hd).astype(compute_dtype)
     out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
     return out, new_cache

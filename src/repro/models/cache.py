@@ -1,7 +1,20 @@
-"""Decode-cache construction (KV buffers, recurrent states)."""
+"""Decode-cache construction (KV buffers, recurrent states).
+
+Two layouts share one pytree *structure* (so jitted decode graphs are
+layout-agnostic up to leaf shapes):
+
+* **dense** — every slot statically reserves ``max_len`` KV rows per
+  full-attention layer: leaves ``(batch, S_buf, K, hd)``.
+* **paged** — full-attention layers share a global pool of fixed-size
+  blocks, ``(n_blocks, page_size, K, hd)``, addressed through per-slot
+  block tables (``(batch, P)`` int32, owned by the serve engine and passed
+  alongside the cache). Block 0 is the *null block*: never allocated,
+  it absorbs masked/inactive writes. Local (sliding-window) ring buffers,
+  recurrent (RG-LRU / Mamba) states, and cross-attention caches stay dense
+  in both layouts — they are already O(window) / O(1) per slot.
+"""
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax
@@ -11,15 +24,21 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_len: int,
-                 dtype) -> dict:
+                 dtype, n_blocks: int = 0, page_size: int = 0) -> dict:
     c: dict = {}
     hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
     if spec.mixer in ("full", "local"):
-        s_buf = max_len
-        if spec.mixer == "local" and cfg.window:
-            s_buf = min(cfg.window, max_len)
-        c["self"] = {"k": jnp.zeros((batch, s_buf, K, hd), dtype),
-                     "v": jnp.zeros((batch, s_buf, K, hd), dtype)}
+        if spec.mixer == "full" and n_blocks:
+            # block-pool layout: global pool, no batch dim (slots address it
+            # through block tables)
+            c["self"] = {"k": jnp.zeros((n_blocks, page_size, K, hd), dtype),
+                         "v": jnp.zeros((n_blocks, page_size, K, hd), dtype)}
+        else:
+            s_buf = max_len
+            if spec.mixer == "local" and cfg.window:
+                s_buf = min(cfg.window, max_len)
+            c["self"] = {"k": jnp.zeros((batch, s_buf, K, hd), dtype),
+                         "v": jnp.zeros((batch, s_buf, K, hd), dtype)}
         if cfg.encoder is not None:
             c["cross"] = {"k": jnp.zeros((batch, cfg.encoder.n_frames, K, hd), dtype),
                           "v": jnp.zeros((batch, cfg.encoder.n_frames, K, hd), dtype)}
@@ -34,23 +53,62 @@ def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_len: int,
     return c
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
-    """Build the zeroed cache pytree matching the model's layer layout."""
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               n_blocks: int = 0, page_size: int = 0) -> Any:
+    """Build the zeroed cache pytree matching the model's layer layout.
+
+    ``n_blocks``/``page_size`` > 0 selects the paged (block-pool) layout for
+    full-attention layers; everything else stays dense.
+    """
     dtype = jnp.dtype(cfg.dtype)
     prefix, pattern, n_rep, rem = cfg.layer_specs()
+
+    def mk(spec):
+        return _layer_cache(spec, cfg, batch, max_len, dtype,
+                            n_blocks=n_blocks, page_size=page_size)
+
     cache: dict = {}
     if prefix:
-        cache["prefix"] = [_layer_cache(s, cfg, batch, max_len, dtype)
-                           for s in prefix]
+        cache["prefix"] = [mk(s) for s in prefix]
     if n_rep:
-        per = [_layer_cache(s, cfg, batch, max_len, dtype) for s in pattern]
+        per = [mk(s) for s in pattern]
         cache["blocks"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape), per)
     if rem:
-        cache["suffix"] = [_layer_cache(s, cfg, batch, max_len, dtype)
-                           for s in rem]
+        cache["suffix"] = [mk(s) for s in rem]
     return cache
 
 
 def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def kv_bytes(cache, *, pool_n_blocks: int | None = None) -> int:
+    """Bytes of self-attention KV storage (dense buffers + paged pools);
+    recurrent states and cross caches excluded. With ``pool_n_blocks``,
+    count only the paged pool leaves (those sized ``n_blocks`` on their
+    batch-position axis)."""
+    total = 0
+
+    def f(path, leaf):
+        nonlocal total
+        keys = [getattr(k, "key", None) for k in path]
+        if "self" not in keys:
+            return
+        if pool_n_blocks is not None:
+            axis = 1 if "blocks" in keys else 0
+            if leaf.shape[axis] != pool_n_blocks:
+                return
+        total += leaf.size * leaf.dtype.itemsize
+
+    jax.tree_util.tree_map_with_path(f, cache)
+    return total
+
+
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
+def default_n_blocks(max_slots: int, max_len: int, page_size: int) -> int:
+    """Dense-equivalent pool capacity plus the reserved null block."""
+    return max_slots * pages_per_slot(max_len, page_size) + 1

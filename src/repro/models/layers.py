@@ -177,9 +177,14 @@ def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
     return jnp.tanh(x / cap) * cap
 
 
-def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray | None = None):
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray | None = None,
+                  valid_len=None):
     """Depthwise causal conv. x: (B, L, C); w: (C, K). Returns (y, new_state)
-    where state holds the trailing K-1 inputs for streaming decode."""
+    where state holds the trailing K-1 inputs for streaming decode.
+
+    ``valid_len`` (traced scalar): only the first ``valid_len`` inputs are
+    real (chunked prefill with a ragged tail) — new_state then holds the
+    K-1 inputs *preceding position valid_len*, not the padded tail."""
     k = w.shape[-1]
     if state is None:
         pad = jnp.zeros(x.shape[:-2] + (k - 1, x.shape[-1]), x.dtype)
@@ -191,5 +196,9 @@ def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray | None = No
     y = jnp.zeros_like(x, dtype=jnp.float32)
     for i in range(k):
         y = y + xp[..., i:i + L, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
-    new_state = xp[..., L:, :]                                  # last K-1 inputs
+    if valid_len is None:
+        new_state = xp[..., L:, :]                              # last K-1 inputs
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, valid_len, k - 1,
+                                                 xp.ndim - 2)
     return y.astype(x.dtype), new_state

@@ -107,8 +107,13 @@ def _block_diag_mm(x, w_blocks, compute_dtype):
     return y.reshape(x.shape)
 
 
-def rglru_mix(p: Params, cfg: ModelConfig, xw, *, h0, compute_dtype, single_step: bool):
-    """Core RG-LRU on pre-conv features xw: (B, L, W) -> (y, h_last)."""
+def rglru_mix(p: Params, cfg: ModelConfig, xw, *, h0, compute_dtype,
+              single_step: bool, valid=None):
+    """Core RG-LRU on pre-conv features xw: (B, L, W) -> (y, h_last).
+
+    ``valid`` ((L,) bool, full path only): invalid steps become the identity
+    (a=1, b=0), so ``h_last`` equals the state at the last valid position —
+    chunked prefill's ragged tail leaves the carry exact."""
     r = cfg.rglru
     c = r.c_exponent
     rt = jax.nn.sigmoid(_block_diag_mm(xw, p["a_gate"]["kernel"], compute_dtype)
@@ -116,9 +121,13 @@ def rglru_mix(p: Params, cfg: ModelConfig, xw, *, h0, compute_dtype, single_step
     it = jax.nn.sigmoid(_block_diag_mm(xw, p["x_gate"]["kernel"], compute_dtype)
                         .astype(jnp.float32))
     log_a = -c * rt * jax.nn.softplus(p["lam"].astype(jnp.float32))  # log sigmoid**c
-    a = jnp.exp(log_a)
     mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     b = mult * it * xw.astype(jnp.float32)
+    if valid is not None:
+        vm = valid[None, :, None]
+        log_a = jnp.where(vm, log_a, 0.0)
+        b = b * vm
+    a = jnp.exp(log_a)
     if single_step:
         h = diag_scan_step(a[:, 0], b[:, 0], h0)
         return h[:, None, :], h
@@ -127,10 +136,13 @@ def rglru_mix(p: Params, cfg: ModelConfig, xw, *, h0, compute_dtype, single_step
 
 
 def rglru_forward(p: Params, cfg: ModelConfig, x, *, state=None, compute_dtype,
-                  part=None, single_step: bool = False):
+                  part=None, single_step: bool = False, valid_len=None):
     """Full Griffin recurrent block. x: (B, L, d).
 
-    state: None or {"h": (B, W), "conv": (B, K-1, W)}. Returns (out, new_state).
+    state: None or {"h": (B, W), "conv": (B, K-1, W)}. ``valid_len`` (traced
+    scalar, full path): only the first valid_len tokens are real — carries
+    (h, conv) come out exact at that position (chunked-prefill ragged tail).
+    Returns (out, new_state).
     """
     r = cfg.rglru
     B, L, d = x.shape
@@ -142,11 +154,14 @@ def rglru_forward(p: Params, cfg: ModelConfig, x, *, state=None, compute_dtype,
         xb = part.act(xb, ("batch", None, "mlp"))
         gb = part.act(gb, ("batch", None, "mlp"))
     conv_state = None if state is None else state["conv"]
-    xw, new_conv = causal_conv1d(xb, p["conv"]["kernel"], conv_state)
+    xw, new_conv = causal_conv1d(xb, p["conv"]["kernel"], conv_state,
+                                 valid_len=valid_len)
     h0 = (jnp.zeros((B, w), jnp.float32) if state is None
           else state["h"].astype(jnp.float32))
+    valid = (None if valid_len is None or single_step
+             else jnp.arange(L) < valid_len)
     h, h_last = rglru_mix(p, cfg, xw, h0=h0, compute_dtype=compute_dtype,
-                          single_step=single_step)
+                          single_step=single_step, valid=valid)
     y = h.astype(compute_dtype) * jax.nn.gelu(gb, approximate=True)
     out = (y @ p["out_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
     new_state = {"h": h_last.astype(jnp.float32), "conv": new_conv}
@@ -178,12 +193,14 @@ def mamba_init(rng, cfg: ModelConfig, dtype) -> Params:
     return p
 
 
-def _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step: bool):
+def _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step: bool,
+                      valid_len=None):
     """xw: (B, L, DI) post-conv post-silu. Returns (y (B,L,DI), h_last).
 
     The (dt, B, C) projections and the (DI, N)-expanded recurrence inputs are
     computed per chunk inside the scan so the O(L*DI*N) tensors never
-    materialize for the full sequence.
+    materialize for the full sequence. ``valid_len`` (traced scalar): steps
+    past it are identity, so h_last is the state at the last valid position.
     """
     B, L, DI = xw.shape
     N = s.d_state
@@ -213,14 +230,17 @@ def _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step: bool):
         return y, h_new
 
     if single_step or L <= s.chunk:
-        y, h_last = chunk_ssm(xw, h0)
+        valid = (None if valid_len is None or single_step
+                 else jnp.arange(L) < valid_len)
+        y, h_last = chunk_ssm(xw, h0, valid)
         return y, h_last
 
     n = -(-L // s.chunk)
     pad = n * s.chunk - L
     xp = jnp.pad(xw, ((0, 0), (0, pad), (0, 0))) if pad else xw
     xs = xp.reshape(B, n, s.chunk, DI).transpose(1, 0, 2, 3)
-    valid = (jnp.arange(n * s.chunk) < L).reshape(n, s.chunk)
+    lim = L if valid_len is None else jnp.minimum(valid_len, L)
+    valid = (jnp.arange(n * s.chunk) < lim).reshape(n, s.chunk)
 
     def body(h, xc_valid):
         xc, vd = xc_valid
@@ -235,8 +255,11 @@ def _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step: bool):
 
 
 def mamba_forward(p: Params, cfg: ModelConfig, x, *, state=None, compute_dtype,
-                  part=None, single_step: bool = False):
-    """Mamba-1 block. x: (B, L, d). state: {"h": (B, DI*N), "conv": (B, K-1, DI)}."""
+                  part=None, single_step: bool = False, valid_len=None):
+    """Mamba-1 block. x: (B, L, d). state: {"h": (B, DI*N), "conv": (B, K-1, DI)}.
+
+    ``valid_len``: see :func:`rglru_forward` — exact carries for chunked
+    prefill's ragged tail."""
     s = cfg.ssm
     B, L, d = x.shape
     DI = s.expand * d
@@ -246,11 +269,13 @@ def mamba_forward(p: Params, cfg: ModelConfig, x, *, state=None, compute_dtype,
         xi = part.act(xi, ("batch", None, "mlp"))
         z = part.act(z, ("batch", None, "mlp"))
     conv_state = None if state is None else state["conv"]
-    xw, new_conv = causal_conv1d(xi, p["conv"]["kernel"], conv_state)
+    xw, new_conv = causal_conv1d(xi, p["conv"]["kernel"], conv_state,
+                                 valid_len=valid_len)
     xw = jax.nn.silu(xw.astype(jnp.float32)).astype(compute_dtype)
     h0 = (jnp.zeros((B, DI * s.d_state), jnp.float32) if state is None
           else state["h"].astype(jnp.float32))
-    y, h_last = _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step)
+    y, h_last = _ssm_scan_chunked(xw, p, s, compute_dtype, h0, single_step,
+                                  valid_len=valid_len)
     y = y.astype(compute_dtype) * jax.nn.silu(z)
     out = (y @ p["out_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
     return out, {"h": h_last.astype(jnp.float32), "conv": new_conv}

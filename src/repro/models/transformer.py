@@ -117,11 +117,37 @@ def init(rng, cfg: ModelConfig) -> PyTree:
 # ==========================================================================
 # single-layer application
 # ==========================================================================
+def _slot_state(state, slot):
+    """Slice one slot's recurrent state out of the pooled cache."""
+    return jax.tree.map(
+        lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, 0), state)
+
+
+def _merge_slot_state(pool, new, slot):
+    """Write a batch-1 recurrent state back into slot ``slot`` of the pool."""
+    return jax.tree.map(
+        lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, 0), pool, new)
+
+
+def _mask_state(new, old, active):
+    """Keep ``old`` state rows where ``active`` is False (slots that are not
+    in the decode phase must not advance their recurrent carry)."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)),
+                               n, o.astype(n.dtype)), new, old)
+
+
 def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
                  positions, enc_out, cache, pos, mode: str, compute_dtype,
-                 part=None):
-    """mode: 'full' (train/prefill, builds cache) | 'decode' (single step).
+                 part=None, active=None, block_tables=None, slot=None,
+                 n_valid=None):
+    """mode: 'full' (train/prefill, builds cache) | 'decode' (single step)
+    | 'extend' (chunked prefill: T tokens for ONE slot of the pooled cache).
 
+    Decode extras: ``active`` ((B,) bool) gates per-slot cache writes;
+    ``block_tables`` ((B, P) int32) selects the paged KV layout for full-
+    attention layers. Extend extras: ``slot``/``n_valid`` (traced scalars).
     Returns (x, new_cache_entry, aux_loss).
     """
     aux = jnp.zeros((), jnp.float32)
@@ -129,37 +155,57 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
     is_local = spec.mixer == "local"
     h = apply_norm(lp["pre_norm"], x, cfg.norm, cfg.norm_eps)
     if spec.mixer in ("full", "local"):
+        bt = block_tables if spec.mixer == "full" else None
         if mode == "full":
             out, (k, v) = attn_mod.attention_forward(
                 lp["attn"], cfg, h, is_local=is_local, positions=positions,
                 compute_dtype=compute_dtype, part=part)
             if cache is not None:
                 new_cache["self"] = _store_kv(cfg, k, v, is_local, cache["self"])
+        elif mode == "extend":
+            out, new_self = attn_mod.attention_extend(
+                lp["attn"], cfg, h, cache["self"], is_local=is_local, pos=pos,
+                n_valid=n_valid, slot=slot, compute_dtype=compute_dtype,
+                block_tables=bt)
+            new_cache["self"] = new_self
         else:
             out, new_self = attn_mod.attention_decode(
                 lp["attn"], cfg, h, cache["self"], is_local=is_local, pos=pos,
-                compute_dtype=compute_dtype, part=part)
+                compute_dtype=compute_dtype, part=part, active=active,
+                block_tables=bt)
             new_cache["self"] = new_self
-    elif spec.mixer == "rglru":
-        state = None if cache is None else cache["rec"]
-        out, new_state = rec_mod.rglru_forward(
-            lp["rglru"], cfg, h, state=state, compute_dtype=compute_dtype,
-            part=part, single_step=(mode == "decode"))
-        if cache is not None:
-            new_cache["rec"] = new_state
-    elif spec.mixer == "mamba":
-        state = None if cache is None else cache["rec"]
-        out, new_state = rec_mod.mamba_forward(
-            lp["mamba"], cfg, h, state=state, compute_dtype=compute_dtype,
-            part=part, single_step=(mode == "decode"))
-        if cache is not None:
-            new_cache["rec"] = new_state
+    elif spec.mixer in ("rglru", "mamba"):
+        fwd = rec_mod.rglru_forward if spec.mixer == "rglru" else rec_mod.mamba_forward
+        key = spec.mixer
+        if mode == "extend":
+            st = _slot_state(cache["rec"], slot)
+            # first chunk of a (possibly reused) slot starts from zero state
+            # — KV rows are position-masked, but recurrent carries are not
+            st = jax.tree.map(
+                lambda l: jnp.where(pos > 0, l, jnp.zeros_like(l)), st)
+            out, new_state = fwd(lp[key], cfg, h, state=st,
+                                 compute_dtype=compute_dtype, part=part,
+                                 single_step=False, valid_len=n_valid)
+            new_cache["rec"] = _merge_slot_state(cache["rec"], new_state, slot)
+        else:
+            state = None if cache is None else cache["rec"]
+            out, new_state = fwd(lp[key], cfg, h, state=state,
+                                 compute_dtype=compute_dtype, part=part,
+                                 single_step=(mode == "decode"))
+            if cache is not None:
+                if mode == "decode" and active is not None:
+                    new_state = _mask_state(new_state, state, active)
+                new_cache["rec"] = new_state
     if cfg.sandwich_norms:
         out = apply_norm(lp["post_norm"], out, cfg.norm, cfg.norm_eps)
     x = x + out
 
     # cross attention (decoder of enc-dec); enc_out: (B, S_enc, d) or KV cache
     if cfg.encoder is not None and spec.mixer in ("full", "local"):
+        if mode == "extend":
+            raise NotImplementedError(
+                "chunked prefill (extend_step) does not support enc-dec "
+                "models — the serve engine prefills those whole")
         h = apply_norm(lp["cross_norm"], x, cfg.norm, cfg.norm_eps)
         if mode == "full":
             out, (ck, cv) = attn_mod.attention_forward(
@@ -217,7 +263,8 @@ def _store_kv(cfg: ModelConfig, k, v, is_local: bool, template):
 # stacked application over the layer layout
 # ==========================================================================
 def _apply_layers(params: Params, cfg: ModelConfig, x, *, positions, enc_out,
-                  cache, pos, mode: str, part=None):
+                  cache, pos, mode: str, part=None, active=None,
+                  block_tables=None, slot=None, n_valid=None):
     compute_dtype = jnp.dtype(cfg.dtype)
     prefix, pattern, n_rep, rem = cfg.layer_specs()
     aux_total = jnp.zeros((), jnp.float32)
@@ -231,7 +278,9 @@ def _apply_layers(params: Params, cfg: ModelConfig, x, *, positions, enc_out,
             lp = part.gather_block(lp, compute_dtype)
         return _apply_layer(lp, spec, cfg, x, positions=positions,
                             enc_out=enc_out, cache=centry, pos=pos, mode=mode,
-                            compute_dtype=compute_dtype, part=part)
+                            compute_dtype=compute_dtype, part=part,
+                            active=active, block_tables=block_tables,
+                            slot=slot, n_valid=n_valid)
 
     if prefix:
         new_cache["prefix"] = []
@@ -392,17 +441,24 @@ def _forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
     return x, new_cache, aux
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None,
+                active=None, block_tables=None):
     """One decode step. tokens: (B, 1) int32; pos: scalar int32 (absolute,
     all sequences aligned) or (B,) int32 (per-slot continuous batching).
 
-    Returns (logits (B, 1, V), new_cache).
+    ``active`` ((B,) bool): gate cache writes per slot — slots not in the
+    decode phase (free, or mid chunked-prefill) keep their cache/state
+    untouched. ``block_tables`` ((B, P) int32): paged KV layout (the cache's
+    full-attention leaves are global block pools). Returns
+    (logits (B, 1, V), new_cache).
     """
     with _model_kernel_scope(cfg, part):
-        return _decode_step(params, cfg, cache, tokens, pos, part=part)
+        return _decode_step(params, cfg, cache, tokens, pos, part=part,
+                            active=active, block_tables=block_tables)
 
 
-def _decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None):
+def _decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None,
+                 active=None, block_tables=None):
     x = embed_tokens(params, cfg, tokens)
     if cfg.learned_pos and "pos_embed" in params:
         tab = params["pos_embed"]["table"]
@@ -412,8 +468,45 @@ def _decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None):
             x = x + jax.lax.dynamic_slice_in_dim(tab, pos, 1, 0)[None].astype(x.dtype)
     x, new_cache, _ = _apply_layers(params, cfg, x, positions=None,
                                     enc_out=None, cache=cache, pos=pos,
-                                    mode="decode", part=part)
+                                    mode="decode", part=part, active=active,
+                                    block_tables=block_tables)
     logits = logits_fn(params, cfg, x, part)[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+def extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
+                *, block_tables=None):
+    """Chunked-prefill step: extend ONE slot of the pooled cache by up to T
+    tokens. tokens: (1, T) int32 at absolute positions ``pos..pos+T-1``;
+    ``n_valid`` (traced scalar) marks the ragged tail — padded positions
+    write nothing and never contaminate valid state (attention is causal,
+    recurrences take identity steps past ``n_valid``). ``slot`` (traced
+    scalar) selects the slot; ``block_tables`` selects the paged layout.
+
+    All of pos/n_valid/slot trace as scalars, so ONE compiled shape serves
+    every chunk of every prompt length. Local-only (no partitioner): SPMD
+    serving keeps the whole-prompt prefill path. Returns
+    (logits (1, 1, V) at the last valid position, new_cache).
+    """
+    with _model_kernel_scope(cfg, None):
+        return _extend_step(params, cfg, cache, tokens, pos, n_valid, slot,
+                            block_tables=block_tables)
+
+
+def _extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
+                 *, block_tables=None):
+    x = embed_tokens(params, cfg, tokens)
+    T = x.shape[1]
+    if cfg.learned_pos and "pos_embed" in params:
+        positions = pos + jnp.arange(T, dtype=jnp.int32)
+        x = x + params["pos_embed"]["table"][positions][None].astype(x.dtype)
+    x, new_cache, _ = _apply_layers(params, cfg, x, positions=None,
+                                    enc_out=None, cache=cache, pos=pos,
+                                    mode="extend", part=None,
+                                    block_tables=block_tables, slot=slot,
+                                    n_valid=n_valid)
+    h_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, 1)
+    logits = logits_fn(params, cfg, h_last, None)[..., :cfg.vocab_size]
     return logits, new_cache
 
 

@@ -1,3 +1,3 @@
-from repro.serve.engine import Request, Result, ServeEngine
+from repro.serve.engine import BlockAllocator, Request, Result, ServeEngine
 
-__all__ = ["Request", "Result", "ServeEngine"]
+__all__ = ["BlockAllocator", "Request", "Result", "ServeEngine"]

@@ -1,18 +1,31 @@
-"""Serving engine: prefill/decode with slot-based continuous batching.
+"""Serving engine: continuous batching over a paged (block-pool) KV cache.
 
 The engine owns a fixed pool of ``max_slots`` sequence slots sharing one
-batched KV/recurrent cache (batch dim = slot id). Requests are admitted into
-free slots (prefill writes that slot's cache region), then a single jit'd
-decode step advances *all* active slots with per-slot positions — finished
-slots free immediately and new requests take their place without draining the
-batch. This is the serving analogue of Ramora's ROB-less NI + multi-backend
-DMA: many independent in-flight streams, no global reorder barrier.
+batched KV/recurrent cache. Two cache layouts:
 
-Prefill is exact-length (jit cache per distinct prompt length). Length
-bucketing is deliberately NOT used: right-padding corrupts ring-buffer
-(sliding-window) caches and recurrent (SSM/RG-LRU) states, so padded prefill
-is only sound for pure global-attention models — exactness is worth the
-occasional recompile here.
+* **dense** — every slot statically reserves ``max_len`` KV rows.
+* **paged** (``paged=True`` / ``cfg.paged_kv``) — full-attention KV lives in
+  a global pool of ``page_size``-row blocks handed out by a
+  :class:`BlockAllocator`; admission is gated on free *blocks* for the
+  request's ``len(prompt) + max_new_tokens`` tokens, so KV memory tracks
+  actual sequence lengths instead of ``max_slots × max_len``. This is the
+  serving analogue of Occamy's banked-TCDM + ROB-less NI memory story: many
+  independent in-flight streams over fixed-size blocks, no per-stream
+  worst-case reservation. Blocks free the moment a request finishes.
+
+Prefill is **chunked**: prompts advance ``prefill_chunk`` tokens per engine
+step through one jitted ``extend_step`` graph (ragged tails ride in the same
+shape behind an ``n_valid`` scalar), interleaved with decode steps for the
+already-running slots — one compiled prefill shape regardless of prompt
+length, and no prefill head-of-line blocking of the decode pool. Enc-dec
+(audio) and vlm requests, and SPMD serving (``part``), keep the legacy
+whole-prompt prefill path (jit per distinct length).
+
+Sampling is fused into the jitted step (per-slot temperatures + PRNG key as
+inputs): each ``step()`` syncs only the sampled token ids to host, never the
+``(max_slots, vocab)`` logits. Cache buffers are donated through every
+jitted update, so admission/decode cost scales with the written region, not
+the pool.
 """
 from __future__ import annotations
 
@@ -28,10 +41,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import dispatch as kdispatch
-from repro.models import decode_step, forward, logits_fn
-from repro.models.cache import init_cache
+from repro.models import decode_step, extend_step, forward, logits_fn
+from repro.models.cache import default_n_blocks, init_cache, kv_bytes, \
+    pages_per_slot
 
 PyTree = Any
+
+#: Slot lifecycle: FREE -> PREFILL (chunked) -> DECODE -> FREE.
+FREE, PREFILL, DECODE = 0, 1, 2
 
 
 @dataclass
@@ -48,31 +65,73 @@ class Request:
 class Result:
     uid: int
     tokens: list[int] = field(default_factory=list)
-    finish_reason: str = ""
+    finish_reason: str = ""                 # eos | length | rejected
+    detail: str = ""                        # rejection cause, when rejected
     prefill_s: float = 0.0
     decode_steps: int = 0
 
 
-def _tree_write_slot(big: PyTree, small: PyTree, slot: int) -> PyTree:
-    """Write a batch-1 cache pytree into slot ``slot`` of the pooled cache.
-    Stacked scan blocks carry a leading n_rep dim (batch is axis 1)."""
-    def f(path, b, s):
-        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
-        axis = 1 if "blocks" in keys else 0
-        idx = [slice(None)] * b.ndim
-        idx[axis] = slice(slot, slot + 1)
-        return b.at[tuple(idx)].set(s.astype(b.dtype))
-    return jax.tree_util.tree_map_with_path(f, big, small)
+class BlockAllocator:
+    """Free-list allocator over the global KV block pool.
+
+    Block 0 is the *null block*: never handed out, it absorbs the dropped
+    writes of inactive slots and ragged prefill tails (their scatter indices
+    route out of bounds / to the null entry instead of another stream's
+    data — the block-pool equivalent of writing into a scratch bank).
+    """
+
+    def __init__(self, n_blocks: int, page_size: int):
+        self.n_blocks = n_blocks
+        self.page_size = page_size
+        self._free = list(range(n_blocks - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_blocks - 1
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_per_slot(n_tokens, self.page_size)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"allocator exhausted: want {n}, "
+                               f"free {len(self._free)}")
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, blocks: list[int]) -> None:
+        self._free.extend(blocks)
+
+
+def _sample(logits, temps, key):
+    """Greedy rows where temp <= 0, temperature-categorical otherwise.
+    Runs inside the jitted step: only sampled ids reach the host."""
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.where(temps <= 0, 1.0, temps)[:, None]
+    sampled = jax.random.categorical(key, logits / t, axis=-1)
+    return jnp.where(temps <= 0, greedy, sampled).astype(jnp.int32)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *, max_slots: int = 4,
                  max_len: int = 512, eos_id: int | None = None, seed: int = 0,
-                 part=None, kernel_backend: str | None = None):
+                 part=None, kernel_backend: str | None = None,
+                 paged: bool | None = None, page_size: int | None = None,
+                 prefill_chunk: int | None = None,
+                 max_blocks: int | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
         self.part = part
+        self.paged = cfg.paged_kv if paged is None else paged
+        self.page_size = page_size or cfg.page_size
+        self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
+        if self.paged and part is not None:
+            raise ValueError("paged serving is local-only: SPMD serving "
+                             "keeps the dense layout")
         # kernel selection for the engine's jitted graphs: explicit arg >
         # cfg.kernel_backend; block tuning comes from the strategy when
         # serving under a Partitioner. Fixed for the engine's lifetime (the
@@ -84,20 +143,55 @@ class ServeEngine:
                                if strat is not None and strat.kernel_blocks
                                else None)
         self.rng = jax.random.PRNGKey(seed)
-        self.cache = init_cache(cfg, max_slots, max_len)
+        if self.paged:
+            n_blocks = (max_blocks or cfg.max_blocks
+                        or default_n_blocks(max_slots, max_len, self.page_size))
+            # pool leaves must be distinguishable from batch-sized leaves,
+            # and a pool smaller than the slot count cannot serve anyway
+            self.n_blocks = max(n_blocks, max_slots + 1)
+            self.allocator = BlockAllocator(self.n_blocks, self.page_size)
+            self.n_pages = pages_per_slot(max_len, self.page_size)
+            self.block_tables = np.zeros((max_slots, self.n_pages), np.int32)
+            self.cache = init_cache(cfg, max_slots, max_len,
+                                    n_blocks=self.n_blocks,
+                                    page_size=self.page_size)
+            pool = kv_bytes(self.cache, pool_n_blocks=self.n_blocks)
+            self._block_kv_bytes = pool // self.n_blocks
+            # ring buffers / recurrent-adjacent dense KV still charge per slot
+            self._slot_kv_bytes = (kv_bytes(self.cache) - pool) // max_slots
+        else:
+            self.allocator = None
+            self.n_blocks = 0
+            self.block_tables = None
+            self.cache = init_cache(cfg, max_slots, max_len)
+            self._block_kv_bytes = 0
+            self._slot_kv_bytes = kv_bytes(self.cache) // max_slots
         # slot bookkeeping (host side)
+        self.phase = np.full(max_slots, FREE, np.int8)
         self.slot_uid = np.full(max_slots, -1, np.int64)
         self.slot_pos = np.zeros(max_slots, np.int32)    # next write position
         self.slot_budget = np.zeros(max_slots, np.int32)
         self.slot_temp = np.zeros(max_slots, np.float32)
-        self.active = np.zeros(max_slots, bool)
+        self.slot_blocks: list[list[int]] = [[] for _ in range(max_slots)]
+        self._prefilling: dict[int, Request] = {}        # slot -> request
+        self._prefill_off = np.zeros(max_slots, np.int32)
+        self._t0 = np.zeros(max_slots, np.float64)
         self.queue: deque[Request] = deque()
         self.results: dict[int, Result] = {}
         self._prefill_cache: dict[tuple, Any] = {}
-        self._decode_fn = jax.jit(self._decode_all)
-        self.stats = {"prefills": 0, "decode_steps": 0, "prefill_recompiles": 0}
+        self._decode_fn = jax.jit(self._decode_all, donate_argnums=(1,))
+        self._commit_fn = jax.jit(self._commit_slot, donate_argnums=(0,))
+        self._chunk_fn = None
+        self.stats = {"prefills": 0, "decode_steps": 0, "prefill_chunks": 0,
+                      "prefill_recompiles": 0, "rejected": 0,
+                      "kv_bytes_alloc": 0}
 
     # ------------------------------------------------------------------
+    @property
+    def active(self) -> np.ndarray:
+        """Slots currently owned by a request (prefilling or decoding)."""
+        return self.phase != FREE
+
     def _kernel_scope(self):
         """Backend/block-tuning scope for prefill and decode graphs. SPMD
         serving never opens a kernel scope: forward/decode_step would
@@ -109,13 +203,63 @@ class ServeEngine:
                                          blocks=self._kernel_blocks)
         return contextlib.nullcontext()
 
-    def _decode_all(self, params, cache, tokens, pos):
-        """One decode step over the whole slot pool (per-slot positions)."""
+    def _tables(self):
+        return jnp.asarray(self.block_tables) if self.paged else None
+
+    # ---- jitted graphs ------------------------------------------------
+    def _decode_all(self, params, cache, tokens, pos, active, tables, temps,
+                    key):
+        """One decode step over the whole slot pool + fused sampling."""
         logits, cache = decode_step(params, self.cfg, cache, tokens, pos,
-                                    part=self.part)
-        return logits[:, 0], cache
+                                    part=self.part, active=active,
+                                    block_tables=tables)
+        return _sample(logits[:, 0], temps, key), cache
+
+    def _chunk_step(self, params, cache, tokens, pos, n_valid, slot, tables,
+                    temp, key):
+        """One chunked-prefill step for one slot + fused sampling (the
+        sampled id only matters on the final chunk)."""
+        logits, cache = extend_step(params, self.cfg, cache, tokens, pos,
+                                    n_valid, slot, block_tables=tables)
+        return _sample(logits[:, 0], temp[None], key), cache
+
+    def _commit_slot(self, cache, slot_cache, slot, tables):
+        """Write a batch-1 dense prefill cache into slot ``slot`` of the
+        pooled cache (donated: cost scales with the written region). Paged
+        pool leaves take the slot's rows through its block table; everything
+        else (dense KV, ring buffers, recurrent states, cross caches) is a
+        dynamic-slice update at the slot index."""
+        page = self.page_size
+
+        def f(path, b, s):
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            axis = 1 if "blocks" in keys else 0
+            if self.paged and b.shape[axis] == self.n_blocks:
+                s_buf = s.shape[axis + 1]
+                rows = jnp.arange(s_buf)
+                trow = jax.lax.dynamic_slice(
+                    tables, (slot, 0), (1, tables.shape[1]))[0]
+                blk = trow[rows // page]
+                r = rows % page
+                if axis == 0:
+                    return b.at[blk, r].set(s[0].astype(b.dtype), mode="drop")
+                return b.at[:, blk, r].set(s[:, 0].astype(b.dtype),
+                                           mode="drop")
+            start = tuple(slot if i == axis else 0 for i in range(b.ndim))
+            return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
+
+        return jax.tree_util.tree_map_with_path(f, cache, slot_cache)
+
+    def _ensure_chunk_fn(self):
+        if self._chunk_fn is None:
+            # one compiled shape serves every chunk of every prompt length
+            self.stats["prefill_recompiles"] += 1
+            self._chunk_fn = jax.jit(self._chunk_step, donate_argnums=(1,))
+        return self._chunk_fn
 
     def _prefill_fn(self, length: int, has_frames: bool, has_extra: bool):
+        """Legacy whole-prompt prefill (enc-dec / vlm / SPMD): jit per
+        distinct prompt length — exactness over the recompile."""
         key = (length, has_frames, has_extra)
         if key not in self._prefill_cache:
             self.stats["prefill_recompiles"] += 1
@@ -132,85 +276,153 @@ class ServeEngine:
             self._prefill_cache[key] = jax.jit(fn)
         return self._prefill_cache[key]
 
-    # ------------------------------------------------------------------
+    # ---- scheduling ----------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
         self.results[req.uid] = Result(uid=req.uid)
 
-    def _sample(self, logits: jnp.ndarray, temps: np.ndarray) -> np.ndarray:
-        """Greedy for temp==0 rows, categorical otherwise."""
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))
-        if (temps <= 0).all():
-            return greedy
-        self.rng, k = jax.random.split(self.rng)
-        t = jnp.asarray(np.where(temps <= 0, 1.0, temps))[:, None]
-        sampled = np.asarray(jax.random.categorical(k, logits / t, axis=-1))
-        return np.where(temps <= 0, greedy, sampled)
+    def _reject(self, req: Request, why: str):
+        """Graceful per-request rejection: the engine loop keeps serving."""
+        res = self.results[req.uid]
+        res.finish_reason = "rejected"
+        res.detail = why
+        self.stats["rejected"] += 1
 
     def _admit(self):
-        """Fill free slots from the queue (prefill each admitted request)."""
+        """Fill free slots from the queue (FCFS). Paged admission is gated
+        on free *blocks* for prompt + generation budget; a head-of-queue
+        request that must wait for blocks stalls admission (no overtaking),
+        an impossible request is rejected instead of crashing the loop."""
         for slot in range(self.max_slots):
-            if self.active[slot] or not self.queue:
-                continue
-            req = self.queue.popleft()
-            t0 = time.perf_counter()
-            prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
-            length = prompt.shape[1]
-            assert length + req.max_new_tokens <= self.max_len, \
-                f"request {req.uid} exceeds max_len {self.max_len}"
-            fn = self._prefill_fn(length, req.frames is not None,
-                                  req.extra_embeds is not None)
-            frames = (jnp.asarray(req.frames)[None]
-                      if req.frames is not None else None)
-            extra = (jnp.asarray(req.extra_embeds)[None]
-                     if req.extra_embeds is not None else None)
+            while self.queue and self.phase[slot] == FREE:
+                req = self.queue[0]
+                n_tokens = len(req.prompt) + req.max_new_tokens
+                if n_tokens > self.max_len:
+                    self.queue.popleft()
+                    self._reject(req, "exceeds max_len")
+                    continue
+                legacy = (self.cfg.encoder is not None
+                          or req.frames is not None
+                          or req.extra_embeds is not None
+                          or self.part is not None)
+                if self.paged:
+                    need = self.allocator.pages_for(n_tokens)
+                    if need > self.allocator.capacity:
+                        self.queue.popleft()
+                        self._reject(req, "exceeds block pool")
+                        continue
+                    if need > self.allocator.n_free:
+                        return                    # wait for blocks to free
+                    blocks = self.allocator.alloc(need)
+                    self.slot_blocks[slot] = blocks
+                    self.block_tables[slot, :] = 0
+                    self.block_tables[slot, :need] = blocks
+                    self.stats["kv_bytes_alloc"] += (
+                        need * self._block_kv_bytes + self._slot_kv_bytes)
+                else:
+                    self.stats["kv_bytes_alloc"] += self._slot_kv_bytes
+                self.queue.popleft()
+                self._t0[slot] = time.perf_counter()
+                self.slot_uid[slot] = req.uid
+                self.slot_temp[slot] = req.temperature
+                self.slot_budget[slot] = req.max_new_tokens
+                self.stats["prefills"] += 1
+                if legacy:
+                    self._prefill_whole(slot, req)
+                else:
+                    self.phase[slot] = PREFILL
+                    self._prefilling[slot] = req
+                    self._prefill_off[slot] = 0
+
+    def _prefill_whole(self, slot: int, req: Request):
+        prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
+        length = prompt.shape[1]
+        fn = self._prefill_fn(length, req.frames is not None,
+                              req.extra_embeds is not None)
+        frames = (jnp.asarray(req.frames)[None]
+                  if req.frames is not None else None)
+        extra = (jnp.asarray(req.extra_embeds)[None]
+                 if req.extra_embeds is not None else None)
+        with self._kernel_scope():
+            logits, slot_cache = fn(self.params, jnp.asarray(prompt),
+                                    frames, extra)
+        self.cache = self._commit_fn(self.cache, slot_cache, np.int32(slot),
+                                     self._tables())
+        self.rng, k = jax.random.split(self.rng)
+        first = int(_sample(logits, jnp.asarray([req.temperature],
+                                                jnp.float32), k)[0])
+        self.phase[slot] = DECODE
+        self._finish_prefill(slot, first, length)
+
+    def _prefill_chunks(self):
+        """Advance every mid-prefill slot by one ``prefill_chunk``-token
+        chunk (ragged tails pad to the same compiled shape behind
+        ``n_valid``); decode interleaves between chunks, so a long prompt
+        never stalls the running slots."""
+        for slot in sorted(self._prefilling):
+            req = self._prefilling[slot]
+            prompt = np.asarray(req.prompt, np.int32)
+            off = int(self._prefill_off[slot])
+            t = min(self.prefill_chunk, len(prompt) - off)
+            buf = np.zeros((1, self.prefill_chunk), np.int32)
+            buf[0, :t] = prompt[off:off + t]
+            self.rng, k = jax.random.split(self.rng)
+            fn = self._ensure_chunk_fn()
             with self._kernel_scope():
-                logits, slot_cache = fn(self.params, jnp.asarray(prompt),
-                                        frames, extra)
-            self.cache = _tree_write_slot(self.cache, slot_cache, slot)
-            first = int(self._sample(logits, np.asarray(
-                [req.temperature]))[0])
-            res = self.results[req.uid]
-            res.tokens.append(first)
-            res.prefill_s = time.perf_counter() - t0
-            self.slot_uid[slot] = req.uid
-            self.slot_pos[slot] = length  # position of `first` when decoded
-            self.slot_budget[slot] = req.max_new_tokens - 1
-            self.slot_temp[slot] = req.temperature
-            self.active[slot] = True
-            self.stats["prefills"] += 1
-            if self.eos_id is not None and first == self.eos_id:
-                self._finish(slot, "eos")
-            elif self.slot_budget[slot] <= 0:
-                self._finish(slot, "length")
+                tok, self.cache = fn(self.params, self.cache,
+                                     jnp.asarray(buf), np.int32(off),
+                                     np.int32(t), np.int32(slot),
+                                     self._tables(),
+                                     np.float32(req.temperature), k)
+            self.stats["prefill_chunks"] += 1
+            off += t
+            self._prefill_off[slot] = off
+            if off >= len(prompt):
+                del self._prefilling[slot]
+                self.phase[slot] = DECODE
+                self._finish_prefill(slot, int(tok[0]), len(prompt))
+
+    def _finish_prefill(self, slot: int, first: int, length: int):
+        res = self.results[self.slot_uid[slot]]
+        res.tokens.append(first)
+        res.prefill_s = time.perf_counter() - self._t0[slot]
+        self.slot_pos[slot] = length  # position of `first` when decoded
+        self.slot_budget[slot] -= 1
+        if self.eos_id is not None and first == self.eos_id:
+            self._finish(slot, "eos")
+        elif self.slot_budget[slot] <= 0:
+            self._finish(slot, "length")
 
     def _finish(self, slot: int, reason: str):
         res = self.results[self.slot_uid[slot]]
         res.finish_reason = reason
-        self.active[slot] = False
+        self.phase[slot] = FREE
         self.slot_uid[slot] = -1
+        if self.paged and self.slot_blocks[slot]:
+            # free blocks immediately: they are admittable this very step
+            self.allocator.release(self.slot_blocks[slot])
+            self.slot_blocks[slot] = []
+            self.block_tables[slot, :] = 0
 
-    def step(self) -> int:
-        """Admit + one decode step over active slots. Returns #active."""
-        self._admit()
-        if not self.active.any():
-            return 0
+    def _decode(self):
+        dec = self.phase == DECODE
+        if not dec.any():
+            return
         # last sampled token per slot feeds the next decode step
         tokens = np.zeros((self.max_slots, 1), np.int32)
-        for slot in range(self.max_slots):
-            if self.active[slot]:
-                tokens[slot, 0] = self.results[self.slot_uid[slot]].tokens[-1]
-        pos = jnp.asarray(self.slot_pos)
+        for slot in np.nonzero(dec)[0]:
+            tokens[slot, 0] = self.results[self.slot_uid[slot]].tokens[-1]
+        self.rng, k = jax.random.split(self.rng)
         with self._kernel_scope():
-            logits, self.cache = self._decode_fn(self.params, self.cache,
-                                                 jnp.asarray(tokens), pos)
-        nxt = self._sample(logits, self.slot_temp)
+            ids, self.cache = self._decode_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.slot_pos), jnp.asarray(dec), self._tables(),
+                jnp.asarray(self.slot_temp), k)
+        ids = np.asarray(ids)
         self.stats["decode_steps"] += 1
-        for slot in range(self.max_slots):
-            if not self.active[slot]:
-                continue
+        for slot in np.nonzero(dec)[0]:
             res = self.results[self.slot_uid[slot]]
-            tok = int(nxt[slot])
+            tok = int(ids[slot])
             res.tokens.append(tok)
             res.decode_steps += 1
             self.slot_pos[slot] += 1
@@ -219,7 +431,13 @@ class ServeEngine:
                 self._finish(slot, "eos")
             elif self.slot_budget[slot] <= 0:
                 self._finish(slot, "length")
-        return int(self.active.sum())
+
+    def step(self) -> int:
+        """Admit, advance prefill chunks, one decode step. Returns #busy."""
+        self._admit()
+        self._prefill_chunks()
+        self._decode()
+        return int((self.phase != FREE).sum())
 
     def run(self, requests: list[Request], *, max_steps: int = 100000
             ) -> list[Result]:
@@ -227,7 +445,7 @@ class ServeEngine:
         for r in requests:
             self.submit(r)
         steps = 0
-        while (self.queue or self.active.any()) and steps < max_steps:
+        while (self.queue or (self.phase != FREE).any()) and steps < max_steps:
             self.step()
             steps += 1
         return [self.results[r.uid] for r in requests]

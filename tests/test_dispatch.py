@@ -38,6 +38,11 @@ def _op_calls(dtype):
     b = _rand((2, 40, 24), dtype, seed=3)
     table = _rand((64, 32), dtype)
     idx = jax.random.randint(KEY, (37,), 0, 64)
+    qd = _rand((3, 2, 4, 16), dtype, seed=4, scale=0.5)   # (B, K, G, D)
+    pool_k = _rand((9, 8, 2, 16), dtype, seed=5, scale=0.5)
+    pool_v = _rand((9, 8, 2, 16), dtype, seed=6)
+    tables = jax.random.randint(KEY, (3, 4), 0, 9, jnp.int32)
+    lengths = jnp.asarray([5, 17, 30], jnp.int32)
     return {
         "gemm": lambda: ops.gemm(x, w, scale=0.5, act="gelu"),
         "flash_attention": lambda: ops.flash_attention(q, k, v, causal=True),
@@ -46,6 +51,8 @@ def _op_calls(dtype):
         "packed_gather_rows": lambda: ops.packed_gather_rows(table, idx),
         "instream_scale_reduce": lambda: ops.instream_scale_reduce(
             x, scale=2.0, shift=-0.5),
+        "paged_attention": lambda: ops.paged_attention(
+            qd, pool_k, pool_v, tables, lengths, cap=30.0),
     }
 
 
@@ -55,7 +62,7 @@ def _op_calls(dtype):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("op", sorted(
     ["gemm", "flash_attention", "lru_scan", "gather_rows",
-     "packed_gather_rows", "instream_scale_reduce"]))
+     "packed_gather_rows", "instream_scale_reduce", "paged_attention"]))
 def test_registry_parity_interpret_vs_ref(op, dtype):
     calls = _op_calls(dtype)
     with use_backend("ref"):

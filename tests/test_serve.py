@@ -1,4 +1,5 @@
-"""Serving engine: continuous batching == sequential decode; slot lifecycle."""
+"""Serving engine: continuous batching == sequential decode; slot lifecycle;
+paged (block-pool) vs dense cache parity; chunked prefill; block accounting."""
 from __future__ import annotations
 
 import jax
@@ -6,16 +7,32 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch, reduced
+from repro.configs import LayerSpec, get_arch, reduced
 from repro.models import decode_step, forward, init, logits_fn
 from repro.models.cache import init_cache
 from repro.serve import Request, ServeEngine
 
 
-def _cfg():
+def _cfg(**kw):
     return reduced(get_arch("qwen3-0.6b")).replace(
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
-        d_ff=128, vocab_size=256, dtype="float32")
+        d_ff=128, vocab_size=256, dtype="float32", **kw)
+
+
+def _local_cfg():
+    """Sliding-window (ring-buffer) attention config."""
+    return _cfg(pattern=(LayerSpec("local", "dense"),), window=8)
+
+
+def _rglru_cfg():
+    return reduced(get_arch("recurrentgemma-2b")).replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32", window=8)
+
+
+def _mamba_cfg():
+    return reduced(get_arch("falcon-mamba-7b")).replace(
+        n_layers=2, d_model=64, vocab_size=256, dtype="float32")
 
 
 def _ref_greedy(cfg, params, prompt, max_new, max_len=96):
@@ -34,6 +51,15 @@ def _ref_greedy(cfg, params, prompt, max_new, max_len=96):
     return toks
 
 
+def _mixed_requests(cfg, n, seed, lo=3, hi=14, new_lo=2, new_hi=7):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(lo, hi)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(new_lo, new_hi)))
+            for i in range(n)]
+
+
 @pytest.fixture(scope="module")
 def setup():
     cfg = _cfg()
@@ -43,12 +69,7 @@ def setup():
 
 def test_continuous_batching_matches_sequential(setup):
     cfg, params = setup
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        rng.integers(3, 12)).astype(np.int32),
-                    max_new_tokens=int(rng.integers(2, 6)))
-            for i in range(7)]
+    reqs = _mixed_requests(cfg, 7, seed=0, lo=3, hi=12, new_lo=2, new_hi=6)
     engine = ServeEngine(cfg, params, max_slots=3, max_len=96)
     results = engine.run(reqs)
     assert all(r.finish_reason == "length" for r in results)
@@ -81,12 +102,21 @@ def test_eos_stops_early(setup):
     assert len(res.tokens) == 1
 
 
-def test_overflow_asserts(setup):
+def test_overflow_rejected_gracefully(setup):
+    """A request that cannot fit finishes with 'rejected' instead of
+    crashing the engine loop; later requests keep being served."""
     cfg, params = setup
+    rng = np.random.default_rng(4)
     engine = ServeEngine(cfg, params, max_slots=1, max_len=16)
-    req = Request(uid=0, prompt=np.zeros(14, np.int32), max_new_tokens=8)
-    with pytest.raises(AssertionError):
-        engine.run([req])
+    bad = Request(uid=0, prompt=np.zeros(14, np.int32), max_new_tokens=8)
+    good = Request(uid=1, prompt=rng.integers(0, 256, 4).astype(np.int32),
+                   max_new_tokens=3)
+    res_bad, res_good = engine.run([bad, good])
+    assert res_bad.finish_reason == "rejected"
+    assert res_bad.tokens == []
+    assert res_good.finish_reason == "length"
+    assert len(res_good.tokens) == 3
+    assert engine.stats["rejected"] == 1
 
 
 def test_prefill_jit_cache_reused(setup):
@@ -96,4 +126,110 @@ def test_prefill_jit_cache_reused(setup):
     reqs = [Request(uid=i, prompt=rng.integers(0, 256, 8).astype(np.int32),
                     max_new_tokens=2) for i in range(6)]
     engine.run(reqs)
-    assert engine.stats["prefill_recompiles"] == 1  # one shared length
+    assert engine.stats["prefill_recompiles"] == 1
+
+
+def test_chunked_prefill_one_compile_across_lengths(setup):
+    """Distinct prompt lengths (shorter and longer than the chunk) all ride
+    the ONE compiled extend_step shape — no per-length jit cache."""
+    cfg, params = setup
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=96,
+                         prefill_chunk=5)
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, 256, length).astype(np.int32),
+                    max_new_tokens=2)
+            for i, length in enumerate((3, 5, 7, 11, 16, 23))]
+    results = engine.run(reqs)
+    assert engine.stats["prefill_recompiles"] == 1
+    assert engine.stats["prefill_chunks"] == sum(
+        -(-len(r.prompt) // 5) for r in reqs)
+    for r, req in zip(results, reqs):
+        assert r.tokens == _ref_greedy(cfg, params, req.prompt,
+                                       req.max_new_tokens), f"uid {r.uid}"
+
+
+# --------------------------------------------------------------------------
+# paged (block-pool) cache
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("make_cfg", [_cfg, _local_cfg, _rglru_cfg,
+                                      _mamba_cfg],
+                         ids=["global", "local-window", "rglru", "mamba"])
+def test_paged_matches_dense_token_for_token(make_cfg):
+    """Greedy parity across interleaved admits/finishes: paged and dense
+    engines emit identical tokens, which also match sequential decode —
+    including eviction-sensitive caches (ring window, recurrent conv state)
+    decoded past the window."""
+    cfg = make_cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    # prompts longer than the window (8) and generations pushing past it
+    reqs = _mixed_requests(cfg, 6, seed=7, lo=4, hi=20, new_lo=3, new_hi=9)
+    outs = {}
+    for paged in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=3, max_len=64,
+                             paged=paged, page_size=8, prefill_chunk=6)
+        results = engine.run([Request(uid=r.uid, prompt=r.prompt,
+                                      max_new_tokens=r.max_new_tokens)
+                              for r in reqs])
+        outs[paged] = [r.tokens for r in results]
+        if paged:
+            assert engine.allocator.n_free == engine.allocator.capacity, \
+                "blocks leaked after all requests finished"
+    assert outs[True] == outs[False]
+    for toks, req in zip(outs[True], reqs):
+        assert toks == _ref_greedy(cfg, params, req.prompt,
+                                   req.max_new_tokens, max_len=64), \
+            f"uid {req.uid}"
+
+
+def test_paged_kv_memory_proportional_to_lengths(setup):
+    """Paged admission charges blocks for actual prompt+budget tokens; at
+    mixed lengths that is far below the dense max_len-per-slot reservation."""
+    cfg, params = setup
+    reqs = _mixed_requests(cfg, 6, seed=9, lo=3, hi=16, new_lo=2, new_hi=6)
+    stats = {}
+    for paged in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=3, max_len=96,
+                             paged=paged, page_size=8)
+        engine.run([Request(uid=r.uid, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens) for r in reqs])
+        stats[paged] = engine.stats["kv_bytes_alloc"]
+    assert stats[True] < stats[False] / 2
+
+
+def test_block_pool_backpressure():
+    """With a pool too small for all requests at once, admission waits for
+    blocks to free (FCFS) and every request still completes; a request that
+    can never fit the pool is rejected, not deadlocked."""
+    cfg = _cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    # pool of 6 usable blocks * 8 rows = 48 tokens; each request needs
+    # 16 tokens -> 2 blocks; 4 slots but only 3 requests fit at once
+    engine = ServeEngine(cfg, params, max_slots=4, max_len=64, paged=True,
+                         page_size=8, max_blocks=7)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 256, 12).astype(np.int32),
+                    max_new_tokens=4) for i in range(6)]
+    reqs.append(Request(uid=6,                       # needs 7 > 6 blocks
+                        prompt=rng.integers(0, 256, 50).astype(np.int32),
+                        max_new_tokens=4))
+    results = engine.run(reqs)
+    assert [r.finish_reason for r in results[:6]] == ["length"] * 6
+    assert results[6].finish_reason == "rejected"
+    assert engine.allocator.n_free == engine.allocator.capacity
+
+
+def test_on_device_sampling_temperature(setup):
+    """temp > 0 samples on device (fused in the jitted step) and still
+    respects budgets; temp == 0 rows stay greedy-deterministic."""
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, 256, 6).astype(np.int32)
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=96, seed=3)
+    res = engine.run([
+        Request(uid=0, prompt=prompt, max_new_tokens=5, temperature=1.0),
+        Request(uid=1, prompt=prompt, max_new_tokens=5, temperature=0.0),
+    ])
+    assert all(len(r.tokens) == 5 for r in res)
+    assert all(0 <= t < cfg.vocab_size for r in res for t in r.tokens)
+    assert res[1].tokens == _ref_greedy(cfg, params, prompt, 5)
