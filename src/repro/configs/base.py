@@ -108,6 +108,18 @@ class ModelConfig:
     # compute / memory policy
     dtype: str = "bfloat16"       # activation/compute dtype
     param_dtype: str = "float32"  # master params
+    # multi-precision quantization (repro.quant) — the paper's 8-to-64-bit
+    # axis. ``weight_dtype`` ("" | int8 | fp8 | float8_e4m3fn) selects
+    # weight-only post-training quantization: quantize_params() wraps matmul
+    # weights in QuantTensor containers (per-channel absmax scales;
+    # ``quant_block`` > 0 adds per-block scales along the contraction axis)
+    # and the gemm_wq registry op dequantizes in-tile. ``kv_dtype`` stores
+    # the paged KV block pools at the narrow width with per-row scales
+    # (paged layout only — dense buffers keep ``dtype``). Serving-side
+    # knobs: training always uses the dense master params.
+    weight_dtype: str = ""        # "" | int8 | fp8 | float8_e4m3fn
+    kv_dtype: str = ""            # "" | int8 | fp8 | float8_e4m3fn
+    quant_block: int = 0          # 0 => per-channel; else scale-block length
     remat: str = "block"          # none | block (remat each scanned block)
     scan_unroll: int = 1          # block-scan unroll factor. Analysis builds
                                   # lower u=1 and u=2 and extrapolate, since
@@ -151,6 +163,14 @@ class ModelConfig:
                 "'auto', 'ref', 'interpret', or 'pallas'")
         if self.page_size < 1 or self.prefill_chunk < 1:
             raise ValueError("page_size and prefill_chunk must be >= 1")
+        _quant_names = ("", "int8", "fp8", "float8_e4m3fn")
+        for field_name in ("weight_dtype", "kv_dtype"):
+            if getattr(self, field_name) not in _quant_names:
+                raise ValueError(
+                    f"{field_name}={getattr(self, field_name)!r}; expected "
+                    f"one of {_quant_names}")
+        if self.quant_block < 0:
+            raise ValueError("quant_block must be >= 0")
         if self.attention_impl not in self._ATTENTION_IMPL_MAP:
             raise ValueError(
                 f"attention_impl={self.attention_impl!r}; expected 'xla', "

@@ -114,13 +114,11 @@ def barrier(mesh: Mesh, axes: tuple[str, ...]):
 
 # --------------------------------------------------------------------------
 # int8 gradient compression with error feedback — packed irregular streams
-# (C5c) applied to gradient sync: 4x fewer bytes over the links.
+# (C5c) applied to gradient sync: 4x fewer bytes over the links. The absmax
+# quantizer itself is the quant subsystem's (one implementation for the
+# gradient channel, the weight containers, and the KV pools — repro.quant).
 # --------------------------------------------------------------------------
-def _quantize_int8(x: jnp.ndarray):
-    amax = jnp.max(jnp.abs(x)) + 1e-12
-    scale = amax / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+from repro.quant import quantize_int8 as _quantize_int8  # noqa: E402
 
 
 def compressed_psum(x: jnp.ndarray, mesh: Mesh, axes: tuple[str, ...],

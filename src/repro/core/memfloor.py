@@ -31,6 +31,22 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import LayerSpec, ModelConfig, ShapeConfig
+from repro.core.roofline import traffic_dtype_bytes
+
+
+def _weight_traffic_bytes(cfg: ModelConfig, fallback: float = 2.0) -> float:
+    """Per-element HBM width of the weight stream: quantized serving
+    (cfg.weight_dtype) reads int8/fp8 storage, else the compute width."""
+    return traffic_dtype_bytes(cfg.weight_dtype, fallback)
+
+
+def _kv_traffic_bytes(cfg: ModelConfig, fallback: float = 2.0) -> float:
+    """Per-element HBM width of the KV-cache stream. Quantized paged KV
+    adds the per-row float16 scale overhead (2 bytes / head_dim elements)."""
+    if not cfg.kv_dtype:
+        return fallback
+    hd = max(cfg.resolved_head_dim, 1)
+    return traffic_dtype_bytes(cfg.kv_dtype, fallback) + 2.0 / hd
 
 
 @dataclass(frozen=True)
@@ -180,7 +196,8 @@ def hbm_bytes_floor(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSizes,
     if shape.kind == "prefill":
         b_loc = _div(shape.global_batch, dp)
         tok = b_loc * shape.seq_len
-        weights = w_shard * abytes * 2              # gather write + fwd read
+        wb = _weight_traffic_bytes(cfg, abytes)     # quantized: storage width
+        weights = w_shard * wb * 2                  # gather write + fwd read
         acts = sum(_layer_act_bytes(sp, cfg, b_loc, shape.seq_len, mesh)
                    for sp in layers)
         cache = _cache_bytes(cfg, b_loc, shape.seq_len, mesh)  # written once
@@ -191,10 +208,11 @@ def hbm_bytes_floor(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSizes,
         return {"weights": weights, "activations": acts, "cache": cache,
                 "logits": logits, "embed": embed, "total": total}
 
-    # decode: one token for every sequence; weights + full cache read
+    # decode: one token for every sequence; weights + full cache read —
+    # exactly the two terms weight/KV quantization narrows
     b_glob = shape.global_batch
     b_loc = _div(b_glob, dp)
-    weights = w_shard * abytes                      # read once per step
+    weights = w_shard * _weight_traffic_bytes(cfg, abytes)  # read once per step
     cache = _cache_bytes(cfg, b_loc, shape.seq_len, mesh)
     acts = b_loc * cfg.d_model * len(layers) * abytes * 8
     v_loc = _div(cfg.vocab_size, mesh.n_model)
@@ -246,7 +264,7 @@ def hbm_peak_floor(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSizes,
                 "embed_copy": embed_c, "working_set": work, "total": total}
 
     b_loc = _div(shape.global_batch, dp)
-    weights = _div(all_params, tp) * abytes
+    weights = _div(all_params, tp) * _weight_traffic_bytes(cfg, abytes)
     cache = _cache_bytes(cfg, b_loc, shape.seq_len, mesh)
     s_act = shape.seq_len if shape.kind == "prefill" else 1
     work = b_loc * s_act * cfg.d_model * abytes * 8
@@ -258,18 +276,23 @@ def hbm_peak_floor(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSizes,
 def _cache_bytes(cfg: ModelConfig, b_loc: float, s: int, mesh: MeshSizes
                  ) -> float:
     """KV/recurrent cache bytes per device (read in decode / written in
-    prefill). Honors window ring buffers and head/length sharding."""
+    prefill). Honors window ring buffers, head/length sharding, and the
+    quantized-KV storage width (cfg.kv_dtype, scale overhead included)."""
     hd = cfg.resolved_head_dim
     nm = mesh.n_model
+    kvb = _kv_traffic_bytes(cfg, 2.0)
     total = 0.0
     for sp in cfg.all_layers():
         if sp.mixer in ("full", "local"):
             s_buf = min(cfg.window, s) if (sp.mixer == "local" and cfg.window) else s
             kv = cfg.n_kv_heads
+            # only the paged full-attention pools store quantized KV
+            # (models/cache.py); local ring buffers stay at compute width
+            lb = kvb if sp.mixer == "full" else 2.0
             if kv % nm == 0:
-                per = b_loc * s_buf * (kv / nm) * hd * 2 * 2
+                per = b_loc * s_buf * (kv / nm) * hd * 2 * lb
             else:
-                per = b_loc * (s_buf / nm) * kv * hd * 2 * 2  # length-sharded
+                per = b_loc * (s_buf / nm) * kv * hd * 2 * lb  # length-sharded
             total += per
             if cfg.encoder is not None:
                 total += b_loc * cfg.encoder.n_frames * kv * hd * 2 * 2

@@ -29,6 +29,23 @@ _COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                    "collective-permute")
 
 
+def traffic_dtype_bytes(name: str, fallback: float = 2.0) -> float:
+    """Bytes per element a tensor of dtype ``name`` moves through HBM.
+
+    Accepts the quant subsystem's names and aliases ("int8", "fp8",
+    "float8_e4m3fn") alongside the usual jnp dtype names; an empty name
+    returns ``fallback`` (the bf16 compute width). This is what makes the
+    analytic byte terms (core/memfloor.py) follow ``ModelConfig.weight_dtype``
+    / ``kv_dtype`` instead of hardcoding the dense parameter width — the
+    roofline's memory term then tracks quantized serving runs, where weight
+    and KV traffic are exactly the terms quantization shrinks.
+    """
+    if not name:
+        return fallback
+    from repro.quant import dtype_bytes
+    return float(dtype_bytes(name))
+
+
 def _shape_bytes(shape_str: str) -> int:
     """'f32[16,128]' -> bytes. '(f32[..], u8[..])' handled by caller."""
     total = 0

@@ -2,8 +2,8 @@
 
 Public surface:
   * :mod:`repro.kernels.ops` — the registry-dispatched ops (``gemm``,
-    ``flash_attention``, ``lru_scan``, ``gather_rows``,
-    ``packed_gather_rows``, ``instream_scale_reduce``).
+    ``gemm_wq``, ``flash_attention``, ``paged_attention``, ``lru_scan``,
+    ``gather_rows``, ``packed_gather_rows``, ``instream_scale_reduce``).
   * :mod:`repro.kernels.dispatch` — ``OpRegistry``, ``use_backend``,
     capability negotiation, block-size tuning (re-exported here).
   * :mod:`repro.kernels.ref` — the pure-jnp oracles (registered as the

@@ -1,0 +1,121 @@
+"""Weight-quantized streaming GEMM with in-tile dequantization (Pallas TPU).
+
+Same schedule as the dense ``gemm`` kernel (gemm.py): grid
+``(M/bm, N/bn, K/bk)`` with K innermost and a VMEM fp32 accumulator — the
+Occamy cluster recipe (C1) — but the weight operand streams through HBM at
+its *storage* width (int8 or fp8-e4m3, half/quarter the bf16 bytes: the
+paper's precision-halving bandwidth double) and is dequantized **in-tile**,
+right after the DMA, the way Ogopogo's in-stream DMA ops (C5b) apply
+elementwise work during the transfer.
+
+Scales arrive pre-gathered per K-tile: the wrapper (ops.py) turns the
+``(n_blocks, N)`` per-block scales into ``(n_k_tiles, N)`` rows — one row
+per K grid step — so the kernel reads a ``(1, bn)`` scale tile with a plain
+``(k, j)`` index map and never straddles a quant-block boundary (the
+wrapper picks ``block_k`` to divide the quant block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wq_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k: int, scale: float,
+               act: str | None, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # in-tile dequant: the (bk, bn) weight tile crossed HBM at storage width
+    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if scale != 1.0:
+            out = out * scale
+        if act == "gelu":
+            out = jax.nn.gelu(out, approximate=True)
+        elif act == "silu":
+            out = jax.nn.silu(out)
+        o_ref[...] = out.astype(out_dtype)
+
+
+def _wq_bias_kernel(x_ref, q_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                    scale: float, act: str | None, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...] * scale + b_ref[...].astype(jnp.float32)
+        if act == "gelu":
+            out = jax.nn.gelu(out, approximate=True)
+        elif act == "silu":
+            out = jax.nn.silu(out)
+        o_ref[...] = out.astype(out_dtype)
+
+
+def gemm_wq(x, qw, tile_scales, *, bias=None, scale: float = 1.0,
+            act: str | None = None, block_m: int = 128, block_n: int = 128,
+            block_k: int = 128, out_dtype=jnp.float32,
+            interpret: bool = False):
+    """x: (M, K) float @ qw: (K, N) int8/fp8 -> (M, N) with fused epilogue.
+
+    ``tile_scales``: (K // block_k, N) fp32 — one dequant-scale row per
+    K-tile (the wrapper expands per-block scales; a tile never straddles a
+    quant block). Shapes must already be padded to the block multiples.
+    """
+    M, K = x.shape
+    K2, N = qw.shape
+    assert K == K2, (x.shape, qw.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "pad in ops.py first", (M, K, N), (block_m, block_k, block_n))
+    n_k = K // block_k
+    assert tile_scales.shape == (n_k, N), (tile_scales.shape, n_k, N)
+    grid = (M // block_m, N // block_n, n_k)
+
+    if bias is None:
+        kernel = functools.partial(_wq_kernel, n_k=n_k, scale=scale, act=act,
+                                   out_dtype=out_dtype)
+        in_specs = [
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
+        ]
+        args = (x, qw, tile_scales)
+    else:
+        kernel = functools.partial(_wq_bias_kernel, n_k=n_k, scale=scale,
+                                   act=act, out_dtype=out_dtype)
+        in_specs = [
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ]
+        args = (x, qw, tile_scales, bias.reshape(1, N))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(*args)

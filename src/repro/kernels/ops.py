@@ -22,15 +22,25 @@ from repro.kernels import ref as _ref
 from repro.kernels.dispatch import OpRequest, registry, use_backend
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.gemm import gemm as _gemm
+from repro.kernels.gemm_wq import gemm_wq as _gemm_wq
 from repro.kernels.instream import instream_scale_reduce as _instream
 from repro.kernels.lru_scan import lru_scan as _lru
 from repro.kernels.packed_gather import gather_rows as _gather
 from repro.kernels.packed_gather import packed_gather_rows as _packed_gather
 from repro.kernels.paged_attention import paged_attention as _pa
 
-__all__ = ["flash_attention", "gather_rows", "gemm", "instream_scale_reduce",
-           "lru_scan", "packed_gather_rows", "paged_attention", "registry",
-           "use_backend"]
+__all__ = ["flash_attention", "gather_rows", "gemm", "gemm_wq",
+           "instream_scale_reduce", "lru_scan", "packed_gather_rows",
+           "paged_attention", "registry", "use_backend"]
+
+#: Storage dtype names of quantized weight/KV operands (str(jnp.dtype)) —
+#: the quant subsystem's canonical list, not a private copy.
+from repro.quant import QUANT_DTYPES as _QUANT_DTYPES  # noqa: E402
+
+
+def _is_float(d: str) -> bool:
+    """True for *dense* float dtypes (fp8 storage dtypes excluded)."""
+    return (("float" in d) or ("bf16" in d)) and d not in _QUANT_DTYPES
 
 
 def _pad_to(x, mults, axes):
@@ -91,6 +101,80 @@ def gemm(x, w, bias=None, *, scale: float = 1.0, act: str | None = None,
     """
     return registry.dispatch("gemm", x, w, bias, scale=scale, act=act,
                              **blocks)
+
+
+# --------------------------------------------------------------------------
+# gemm_wq — weight-quantized GEMM, dequantized in-tile (paper Fig. 4b:
+# halving precision doubles density; weights stream HBM at storage width)
+# --------------------------------------------------------------------------
+def _gemm_wq_supports(req: OpRequest) -> bool:
+    if len(req.shapes) < 3 or any(len(s) != 2 for s in req.shapes[:3]):
+        return False
+    (M, K), (K2, N), (nb, N2) = req.shapes[:3]
+    return (K == K2 and N == N2 and nb >= 1 and K % nb == 0
+            and _is_float(req.dtypes[0]) and req.dtypes[1] in _QUANT_DTYPES)
+
+
+@registry.register("gemm_wq", "pallas", backends=("pallas", "interpret"),
+                   supports=_gemm_wq_supports, priority=10,
+                   pass_interpret=True)
+@partial(jax.jit, static_argnames=("scale", "act", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def _gemm_wq_kernel(x, qw, scales, bias=None, *, scale: float = 1.0,
+                    act: str | None = None, block_m: int = 128,
+                    block_n: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    import math
+
+    M, K = x.shape
+    N = qw.shape[1]
+    nb = scales.shape[0]
+    qb = K // nb                       # quant-block length along K
+    # a K-tile must never straddle a quant block: largest block_k-compatible
+    # divisor of qb (K % bk == 0 follows since bk | qb | K — no K padding)
+    bk = math.gcd(block_k, qb)
+    n_k = K // bk
+    # one dequant-scale row per K-tile, pre-gathered so the kernel's scale
+    # BlockSpec is a plain (k, j) index map
+    tile_scales = scales.astype(jnp.float32)[
+        (jnp.arange(n_k) * bk) // qb]
+    xp, px = _pad_to(x, (block_m,), (0,))
+    qp, pw = _pad_to(qw, (block_n,), (1,))
+    sp, _ = _pad_to(tile_scales, (block_n,), (1,))
+    bp = None
+    if bias is not None:
+        bp, _ = _pad_to(bias, (block_n,), (0,))
+    out = _gemm_wq(xp, qp, sp, bias=bp, scale=scale, act=act,
+                   block_m=block_m, block_n=block_n, block_k=bk,
+                   interpret=interpret)
+    return out[:M, :N] if (px or pw) else out
+
+
+@registry.register("gemm_wq", "ref", backends=("ref", "interpret", "pallas"))
+@partial(jax.jit, static_argnames=("scale", "act"))
+def _gemm_wq_ref(x, qw, scales, bias=None, *, scale: float = 1.0,
+                 act: str | None = None):
+    return _ref.gemm_wq_ref(x, qw, scales, bias=bias, scale=scale, act=act)
+
+
+registry.register_blocks("gemm_wq", "small", block_m=32, block_n=32,
+                         block_k=32)
+registry.register_blocks("gemm_wq", "large", block_m=128, block_n=128,
+                         block_k=128)
+
+
+def gemm_wq(x, qw, scales, bias=None, *, scale: float = 1.0,
+            act: str | None = None, **blocks):
+    """Weight-quantized x: (M, K) @ qw: (K, N) int8/fp8 with per-block
+    dequant scales (nb, N), nb | K (nb == 1 => per-channel), and the same
+    fused scale/bias/activation epilogue as ``gemm``.
+
+    The Pallas entry dequantizes weight tiles in-register after the DMA;
+    requests the kernel layout can't express (odd ranks, dense-float
+    weights) negotiate down to the dequantize-then-``gemm`` oracle.
+    """
+    return registry.dispatch("gemm_wq", x, qw, scales, bias, scale=scale,
+                             act=act, **blocks)
 
 
 # --------------------------------------------------------------------------
@@ -164,40 +248,55 @@ def _pa_supports(req: OpRequest) -> bool:
     (N, page, Kp, Dp) = req.shapes[1]
     # kernel layout: pool heads/dims must match q, and the head dim must
     # fill at least one sublane — else negotiate down to the gather oracle
-    return (Kp == K and Dp == D and D >= 8
-            and all(("float" in d) or ("bf16" in d) for d in req.dtypes[:3])
-            and all("int" in d for d in req.dtypes[3:5]))
+    if not (Kp == K and Dp == D and D >= 8 and _is_float(req.dtypes[0])
+            and all("int" in d for d in req.dtypes[3:5])):
+        return False
+    if len(req.shapes) >= 7:
+        # quantized pools: int8/fp8 storage + (N, page, K) per-row scales
+        return (all(d in _QUANT_DTYPES for d in req.dtypes[1:3])
+                and req.shapes[5] == (N, page, K) == req.shapes[6]
+                and all(_is_float(d) for d in req.dtypes[5:7]))
+    return all(_is_float(d) for d in req.dtypes[1:3])
 
 
 @registry.register("paged_attention", "pallas",
                    backends=("pallas", "interpret"), supports=_pa_supports,
                    priority=10, pass_interpret=True)
 @partial(jax.jit, static_argnames=("scale", "cap", "interpret"))
-def _pa_kernel(q, k_pool, v_pool, block_tables, lengths, *,
-               scale: float | None = None, cap: float = 0.0,
+def _pa_kernel(q, k_pool, v_pool, block_tables, lengths, k_scale=None,
+               v_scale=None, *, scale: float | None = None, cap: float = 0.0,
                interpret: bool = False):
-    return _pa(q, k_pool, v_pool, block_tables, lengths, scale=scale,
-               cap=cap, interpret=interpret)
+    return _pa(q, k_pool, v_pool, block_tables, lengths, k_scale, v_scale,
+               scale=scale, cap=cap, interpret=interpret)
 
 
 @registry.register("paged_attention", "ref",
                    backends=("ref", "interpret", "pallas"))
 @partial(jax.jit, static_argnames=("scale", "cap"))
-def _pa_ref(q, k_pool, v_pool, block_tables, lengths, *,
-            scale: float | None = None, cap: float = 0.0):
+def _pa_ref(q, k_pool, v_pool, block_tables, lengths, k_scale=None,
+            v_scale=None, *, scale: float | None = None, cap: float = 0.0):
     return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
-                                    scale=scale, cap=cap)
+                                    k_scale, v_scale, scale=scale, cap=cap)
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                    scale: float | None = None, cap: float = 0.0, **blocks):
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, k_scale=None,
+                    v_scale=None, *, scale: float | None = None,
+                    cap: float = 0.0, **blocks):
     """Block-pool decode attention. q: (B, K, G, D) one token per slot;
     k/v pools: (N, page, K, D); block_tables: (B, P) int32; lengths: (B,)
-    int32 valid tokens per slot. Pool layouts the kernel can't express
+    int32 valid tokens per slot. ``k_scale``/``v_scale`` ((N, page, K)
+    float) mark quantized (int8/fp8) pools — rows dequantize at read with
+    their per-row absmax scales. Pool layouts the kernel can't express
     negotiate down to the gather-based oracle."""
+    if str(k_pool.dtype) in _QUANT_DTYPES and k_scale is None:
+        # negotiation falls back to *correct* paths only: attention over
+        # raw int8/fp8 codes would be silent garbage, not a fallback
+        raise ValueError(
+            f"paged_attention: quantized pools ({k_pool.dtype}) require "
+            "k_scale/v_scale per-row dequant scales")
     return registry.dispatch("paged_attention", q, k_pool, v_pool,
-                             block_tables, lengths, scale=scale, cap=cap,
-                             **blocks)
+                             block_tables, lengths, k_scale, v_scale,
+                             scale=scale, cap=cap, **blocks)
 
 
 # --------------------------------------------------------------------------

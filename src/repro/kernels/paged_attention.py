@@ -29,9 +29,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _pa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-               m_ref, l_ref, acc_ref, *, page: int, n_pages: int,
-               scale: float, cap: float, out_dtype):
+def _pa_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+             m_ref, l_ref, acc_ref, *, page: int, n_pages: int,
+             scale: float, cap: float, out_dtype):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -51,6 +51,13 @@ def _pa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0]                              # (G, D)
         k = k_ref[0, :, 0, :]                        # (page, D)
         v = v_ref[0, :, 0, :]
+        if ks_ref is not None:
+            # quantized pool: int8/fp8 rows crossed HBM at storage width;
+            # dequantize in-tile with the page's per-row scales
+            k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None].astype(
+                jnp.float32)
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None].astype(
+                jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (G, page)
@@ -74,30 +81,54 @@ def _pa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        / jnp.maximum(l_ref[...], 1e-37)).astype(out_dtype)
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+def _pa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, **kw):
+    _pa_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, None, None, o_ref,
+             m_ref, l_ref, acc_ref, **kw)
+
+
+def _pa_kernel_quant(tbl_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     o_ref, m_ref, l_ref, acc_ref, **kw):
+    _pa_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+             m_ref, l_ref, acc_ref, **kw)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths,
+                    k_scale=None, v_scale=None, *,
                     scale: float | None = None, cap: float = 0.0,
                     interpret: bool = False):
     """q: (B, K, G, D) single decode token per slot; k/v pools
     (N, page, K, D); block_tables: (B, P) int32 pool block ids; lengths:
-    (B,) int32 valid tokens per slot (current token included). Returns
-    (B, K, G, D)."""
+    (B,) int32 valid tokens per slot (current token included). With
+    ``k_scale``/``v_scale`` ((N, page, K) float) the pools are *quantized*
+    (int8/fp8 storage) and rows dequantize in-tile with their per-row absmax
+    scales — the scale tiles chase the block table exactly like the pools.
+    Returns (B, K, G, D)."""
     B, K, G, D = q.shape
     N, page = k_pool.shape[:2]
     P = block_tables.shape[1]
     scale = (1.0 / (D ** 0.5)) if scale is None else scale
+    quant = k_scale is not None
     kernel = functools.partial(
-        _pa_kernel, page=page, n_pages=P, scale=scale, cap=cap,
-        out_dtype=q.dtype)
+        _pa_kernel_quant if quant else _pa_kernel, page=page, n_pages=P,
+        scale=scale, cap=cap, out_dtype=q.dtype)
+    pool_spec = pl.BlockSpec((1, page, 1, D),
+                             lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, k, j, tbl, ln: (b, k, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    args = [q, k_pool, v_pool]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, page, 1), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k))
+        in_specs += [scale_spec, scale_spec]
+        args += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                       # block_tables, lengths
         grid=(B, K, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, k, j, tbl, ln: (b, k, 0, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, k, j, tbl, ln: (b, k, 0, 0)),
         scratch_shapes=[
@@ -111,5 +142,4 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pool, v_pool)
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *args)

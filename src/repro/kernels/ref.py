@@ -20,6 +20,20 @@ def gemm_ref(x, w, *, bias=None, scale=1.0, act=None):
     return out
 
 
+def gemm_wq_ref(x, qw, scales, bias=None, *, scale=1.0, act=None):
+    """Dequantize-then-GEMM oracle for the weight-quantized ``gemm_wq``.
+
+    qw: (K, N) int8/fp8 storage; scales: (nb, N) fp32 per-block absmax
+    scales with nb dividing K (nb == 1 => per-channel). The dequantized
+    weight is materialized in fp32 — the negotiation fallback and the
+    numerical source of truth for the in-tile-dequant Pallas kernel."""
+    K, N = qw.shape
+    nb = scales.shape[0]
+    w = (qw.astype(jnp.float32).reshape(nb, K // nb, N)
+         * scales.astype(jnp.float32)[:, None, :]).reshape(K, N)
+    return gemm_ref(x, w, bias=bias, scale=scale, act=act)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, scale=None):
     """q: (BH, Sq, D); k, v: (BK, Skv, D) with BH % BK == 0. Plain softmax
     attention. GQA (BH = BK*G) is handled by a grouped reshape of q — the
@@ -47,18 +61,29 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, scale=None):
     return out.reshape(BH, Sq, D)
 
 
-def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
-                        scale=None, cap=0.0):
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                        k_scale=None, v_scale=None, *, scale=None, cap=0.0):
     """Gather-based paged decode attention. q: (B, K, G, D) one token per
     slot; k/v pools: (N, page, K, D); block_tables: (B, P) int32 pool block
     ids; lengths: (B,) int32 valid tokens (current included). The slot's
     sequence is materialized by gathering its pages — row ``p`` of the
-    logical sequence is ``pool[table[b, p // page], p % page]``."""
+    logical sequence is ``pool[table[b, p // page], p % page]``.
+
+    ``k_scale``/``v_scale`` ((N, page, K) float) mark *quantized* pools
+    (int8/fp8 storage with per-row absmax scales): gathered rows are
+    dequantized before scoring — the read-side half of the quantized paged
+    KV cache (docs/quantization.md)."""
     B, K, G, D = q.shape
     page = k_pool.shape[1]
     P = block_tables.shape[1]
     k = k_pool[block_tables].reshape(B, P * page, K, D)
     v = v_pool[block_tables].reshape(B, P * page, K, D)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[block_tables].reshape(
+            B, P * page, K).astype(jnp.float32)[..., None]
+    if v_scale is not None:
+        v = v.astype(jnp.float32) * v_scale[block_tables].reshape(
+            B, P * page, K).astype(jnp.float32)[..., None]
     scale = (1.0 / jnp.sqrt(D)) if scale is None else scale
     s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale

@@ -43,11 +43,25 @@ def main(argv=None):
     ap.add_argument("--max-blocks", type=int, default=None,
                     help="global KV block-pool size (default: dense-"
                          "equivalent capacity)")
+    ap.add_argument("--weight-dtype", default=None,
+                    choices=("int8", "fp8"),
+                    help="weight-only quantization (repro.quant): wraps "
+                         "matmul weights post-load, dispatches gemm_wq")
+    ap.add_argument("--kv-dtype", default=None, choices=("int8", "fp8"),
+                    help="quantized paged KV pools (requires --paged)")
+    ap.add_argument("--quant-block", type=int, default=None,
+                    help="per-block weight-scale length (0 = per-channel)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    quant_kw = {k: v for k, v in (("weight_dtype", args.weight_dtype),
+                                  ("kv_dtype", args.kv_dtype),
+                                  ("quant_block", args.quant_block))
+                if v is not None}
+    if quant_kw:
+        cfg = cfg.replace(**quant_kw)
     params = model_init(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, max_slots=args.slots,
                          max_len=args.max_len, seed=args.seed,

@@ -348,18 +348,38 @@ def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
     into the slot's current block (inactive slots dropped via an
     out-of-bounds block id); the read gathers the slot's pages through
     ``ops.paged_attention``.
+
+    Quantized pools (cache also carries ``k_scale``/``v_scale`` — see
+    ``models/cache.py``): the incoming row is quantized per (slot, head)
+    with its own absmax scale before the scatter, and the registry read
+    dequantizes — KV crosses HBM at storage width both ways.
     """
     B = q.shape[0]
     hd, H = cfg.resolved_head_dim, cfg.n_heads
     pool_k, pool_v = cache["k"], cache["v"]
+    quantized = "k_scale" in cache
     n_blocks, page = pool_k.shape[:2]
     blk = jnp.take_along_axis(block_tables, (pos // page)[:, None],
                               axis=1)[:, 0]
     if active is not None:
         blk = jnp.where(active, blk, n_blocks)  # OOB -> write dropped
     row = pos % page
-    pool_k = pool_k.at[blk, row].set(k[:, 0].astype(pool_k.dtype), mode="drop")
-    pool_v = pool_v.at[blk, row].set(v[:, 0].astype(pool_v.dtype), mode="drop")
+    k_sc = v_sc = None
+    if quantized:
+        from repro.quant import quantize_kv
+        kq, ks = quantize_kv(k[:, 0], str(cfg.kv_dtype))      # (B,K,hd),(B,K)
+        vq, vs = quantize_kv(v[:, 0], str(cfg.kv_dtype))
+        pool_k = pool_k.at[blk, row].set(kq.astype(pool_k.dtype), mode="drop")
+        pool_v = pool_v.at[blk, row].set(vq.astype(pool_v.dtype), mode="drop")
+        k_sc = cache["k_scale"].at[blk, row].set(
+            ks.astype(cache["k_scale"].dtype), mode="drop")
+        v_sc = cache["v_scale"].at[blk, row].set(
+            vs.astype(cache["v_scale"].dtype), mode="drop")
+    else:
+        pool_k = pool_k.at[blk, row].set(k[:, 0].astype(pool_k.dtype),
+                                         mode="drop")
+        pool_v = pool_v.at[blk, row].set(v[:, 0].astype(pool_v.dtype),
+                                         mode="drop")
     # registry read: an enclosing use_backend scope / cfg.kernel_backend
     # routes through the Pallas kernel; otherwise pin the gather-based ref
     # oracle (the XLA path) — ambient selection (env var / TPU auto) must
@@ -369,10 +389,14 @@ def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
           or "ref")
     with kdispatch.use_backend(be):
         out = _reg_pa(q[:, 0], pool_k, pool_v, block_tables, pos + 1,
-                      scale=_scale(cfg), cap=cfg.attn_softcap)
+                      k_sc, v_sc, scale=_scale(cfg), cap=cfg.attn_softcap)
     out = out.reshape(B, 1, H * hd).astype(compute_dtype)
     out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x_dtype)
-    return out, {"k": pool_k, "v": pool_v}
+    new_cache = {"k": pool_k, "v": pool_v}
+    if quantized:
+        new_cache["k_scale"] = k_sc
+        new_cache["v_scale"] = v_sc
+    return out, new_cache
 
 
 def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
@@ -419,14 +443,40 @@ def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
             block_tables, (slot, 0), (1, n_pages))[0]         # (P,)
         blk = table_row[positions // page]
         blk_w = jnp.where(valid_q, blk, n_blocks)             # pads dropped
-        new_k = pool_k.at[blk_w, positions % page].set(
-            k[0].astype(pool_k.dtype), mode="drop")
-        new_v = pool_v.at[blk_w, positions % page].set(
-            v[0].astype(pool_v.dtype), mode="drop")
-        new_cache = {"k": new_k, "v": new_v}
-        # pre-write snapshot of the slot's logical sequence
-        k_old = pool_k[table_row].reshape(1, n_pages * page, K, hd)
-        v_old = pool_v[table_row].reshape(1, n_pages * page, K, hd)
+        rows = positions % page
+        if "k_scale" in cache:
+            # quantized pools: per-row absmax quantize the chunk before the
+            # scatter; the pre-write snapshot dequantizes at read
+            from repro.quant import dequantize_kv, quantize_kv
+            kq, ksc = quantize_kv(k[0], str(cfg.kv_dtype))    # (T,K,hd),(T,K)
+            vq, vsc = quantize_kv(v[0], str(cfg.kv_dtype))
+            new_cache = {
+                "k": pool_k.at[blk_w, rows].set(kq.astype(pool_k.dtype),
+                                                mode="drop"),
+                "v": pool_v.at[blk_w, rows].set(vq.astype(pool_v.dtype),
+                                                mode="drop"),
+                "k_scale": cache["k_scale"].at[blk_w, rows].set(
+                    ksc.astype(cache["k_scale"].dtype), mode="drop"),
+                "v_scale": cache["v_scale"].at[blk_w, rows].set(
+                    vsc.astype(cache["v_scale"].dtype), mode="drop"),
+            }
+            k_old = dequantize_kv(pool_k[table_row],
+                                  cache["k_scale"][table_row],
+                                  compute_dtype).reshape(
+                                      1, n_pages * page, K, hd)
+            v_old = dequantize_kv(pool_v[table_row],
+                                  cache["v_scale"][table_row],
+                                  compute_dtype).reshape(
+                                      1, n_pages * page, K, hd)
+        else:
+            new_cache = {
+                "k": pool_k.at[blk_w, rows].set(k[0].astype(pool_k.dtype),
+                                                mode="drop"),
+                "v": pool_v.at[blk_w, rows].set(v[0].astype(pool_v.dtype),
+                                                mode="drop"),
+            }
+            k_old = pool_k[table_row].reshape(1, n_pages * page, K, hd)
+            v_old = pool_v[table_row].reshape(1, n_pages * page, K, hd)
         old_pos = jnp.arange(n_pages * page)                  # absolute
     else:
         S_buf = cache["k"].shape[1]

@@ -12,6 +12,16 @@ layout-agnostic up to leaf shapes):
   it absorbs masked/inactive writes. Local (sliding-window) ring buffers,
   recurrent (RG-LRU / Mamba) states, and cross-attention caches stay dense
   in both layouts — they are already O(window) / O(1) per slot.
+
+With ``cfg.kv_dtype`` set to a quantized dtype ("int8" / "fp8"), the paged
+pools store K/V at the narrow width plus per-row float16 absmax scales
+(``k_scale``/``v_scale`` leaves, shape ``(n_blocks, page_size, K)``) —
+writes quantize per token row, reads dequantize through the
+``paged_attention`` registry op. The sizing helpers (:func:`kv_bytes`,
+:func:`kv_block_bytes`, :func:`n_blocks_for_bytes`) count the storage
+dtype, so the same HBM budget admits proportionally more blocks
+(docs/quantization.md). Quantized KV is a paged-layout feature; dense
+buffers keep the compute dtype.
 """
 from __future__ import annotations
 
@@ -21,6 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.quant import canonical_dtype, is_quant_dtype
+
+#: dtype of the paged pools' per-row absmax scales.
+KV_SCALE_DTYPE = jnp.float16
 
 
 def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_len: int,
@@ -31,8 +45,15 @@ def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_len: int,
         if spec.mixer == "full" and n_blocks:
             # block-pool layout: global pool, no batch dim (slots address it
             # through block tables)
-            c["self"] = {"k": jnp.zeros((n_blocks, page_size, K, hd), dtype),
-                         "v": jnp.zeros((n_blocks, page_size, K, hd), dtype)}
+            kv_dt = dtype
+            if is_quant_dtype(cfg.kv_dtype):
+                kv_dt = jnp.dtype(canonical_dtype(cfg.kv_dtype))
+            c["self"] = {"k": jnp.zeros((n_blocks, page_size, K, hd), kv_dt),
+                         "v": jnp.zeros((n_blocks, page_size, K, hd), kv_dt)}
+            if kv_dt != dtype:
+                shp = (n_blocks, page_size, K)
+                c["self"]["k_scale"] = jnp.zeros(shp, KV_SCALE_DTYPE)
+                c["self"]["v_scale"] = jnp.zeros(shp, KV_SCALE_DTYPE)
         else:
             s_buf = max_len
             if spec.mixer == "local" and cfg.window:
@@ -112,3 +133,28 @@ def pages_per_slot(max_len: int, page_size: int) -> int:
 def default_n_blocks(max_slots: int, max_len: int, page_size: int) -> int:
     """Dense-equivalent pool capacity plus the reserved null block."""
     return max_slots * pages_per_slot(max_len, page_size) + 1
+
+
+def kv_block_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """KV bytes of ONE pool block summed over the paged (global-attention)
+    layers, honoring ``cfg.kv_dtype`` — quantized pools count the storage
+    width plus the per-row scale overhead (``2 × K`` fp16 scalars per row).
+    """
+    hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
+    kv_bytes_elem = 2 * jnp.dtype(cfg.dtype).itemsize          # K and V
+    scale_bytes_row = 0
+    if is_quant_dtype(cfg.kv_dtype):
+        kv_bytes_elem = 2 * jnp.dtype(canonical_dtype(cfg.kv_dtype)).itemsize
+        scale_bytes_row = 2 * jnp.dtype(KV_SCALE_DTYPE).itemsize
+    n_paged = sum(1 for sp in cfg.all_layers() if sp.mixer == "full")
+    per_row = K * (hd * kv_bytes_elem + scale_bytes_row)
+    return n_paged * page_size * per_row
+
+
+def n_blocks_for_bytes(cfg: ModelConfig, hbm_bytes: int, page_size: int
+                       ) -> int:
+    """Pool blocks (null block included) a KV-HBM budget admits — the
+    precision dividend: int8/fp8 KV roughly doubles/quadruples the blocks
+    the same budget holds vs bf16/fp32."""
+    per_block = kv_block_bytes(cfg, page_size)
+    return max(int(hbm_bytes // max(per_block, 1)), 1) + 1

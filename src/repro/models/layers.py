@@ -13,8 +13,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch as kdispatch
+from repro.quant import QuantTensor
 
 Params = dict[str, Any]
+
+
+def weight(kernel, compute_dtype):
+    """Resolve a parameter leaf for a matmul: quantized containers pass
+    through untouched (``dense`` dispatches the weight-quantized GEMM),
+    dense arrays cast to the compute dtype as before."""
+    if isinstance(kernel, QuantTensor):
+        return kernel
+    return kernel.astype(compute_dtype)
 
 
 # --------------------------------------------------------------------------
@@ -92,16 +102,26 @@ def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
     raise ValueError(kind)
 
 
-def dense(x: jnp.ndarray, w: jnp.ndarray, *, act: str | None = None
-          ) -> jnp.ndarray:
+def dense(x: jnp.ndarray, w, *, act: str | None = None) -> jnp.ndarray:
     """Linear layer (optionally activation-fused) through the kernel registry.
 
-    Under an explicit ``use_backend`` kernel scope this routes the matmul
-    through ``ops.gemm`` — the Pallas streaming GEMM with its fused in-stream
-    epilogue (paper C5b) — with leading dims flattened into the row dim.
-    Otherwise it is the plain jnp matmul, bit-identical to the historical
-    path.
+    A :class:`~repro.quant.QuantTensor` weight dispatches the
+    weight-quantized ``ops.gemm_wq`` op (int8/fp8 weights dequantized
+    in-tile, fused epilogue) on *every* backend — the ref oracle is the
+    dequantize-then-GEMM XLA path, so quantized layers need no call-site
+    opt-in. Under an explicit ``use_backend`` kernel scope dense-float
+    weights route through ``ops.gemm`` — the Pallas streaming GEMM with its
+    fused in-stream epilogue (paper C5b) — with leading dims flattened into
+    the row dim. Otherwise it is the plain jnp matmul, bit-identical to the
+    historical path.
     """
+    if isinstance(w, QuantTensor) and x.ndim >= 2 and w.ndim == 2:
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        y = ops.gemm_wq(x.reshape(-1, x.shape[-1]), w.q, w.scales, act=act)
+        return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    if isinstance(w, QuantTensor):
+        w = w.dequantize(x.dtype)
     if kdispatch.kernel_scope_active() and x.ndim >= 2:
         from repro.kernels import ops
         lead = x.shape[:-1]
@@ -116,15 +136,16 @@ def apply_mlp(p: Params, x: jnp.ndarray, act: str, gated: bool,
     xc = x.astype(compute_dtype)
     if part is None:
         # local path: registry-dispatched dense (kernel backends fuse the
-        # activation into the GEMM epilogue)
-        wu = p["up"]["kernel"].astype(compute_dtype)
+        # activation into the GEMM epilogue; QuantTensor weights dispatch
+        # the weight-quantized gemm_wq with in-tile dequant)
+        wu = weight(p["up"]["kernel"], compute_dtype)
         if gated:
-            h = dense(xc, p["gate"]["kernel"].astype(compute_dtype),
+            h = dense(xc, weight(p["gate"]["kernel"], compute_dtype),
                       act=act) * dense(xc, wu)
         else:
             h = dense(xc, wu, act=act)
         out = dense(h.astype(compute_dtype),
-                    p["down"]["kernel"].astype(compute_dtype))
+                    weight(p["down"]["kernel"], compute_dtype))
         return out.astype(x.dtype)
     up = xc @ p["up"]["kernel"].astype(compute_dtype)
     up = part.act(up, ("batch",) + (None,) * (up.ndim - 2) + ("mlp",))

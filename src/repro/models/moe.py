@@ -116,13 +116,39 @@ def _combine_sort(ye, meta, gate, T: int):
     return out
 
 
+def _expert_ffn_wq(p: Params, xe, compute_dtype):
+    """Quantized expert FFN under a kernel scope: each expert's (d, f)
+    int8/fp8 weight slab dispatches the ``gemm_wq`` registry op (in-tile
+    dequant, fused silu epilogue) — the per-expert grouped GEMM as E
+    weight-quantized streaming GEMMs. xe: (G, E, C, d) -> (G, E, C, d)."""
+    G, E, C, d = xe.shape
+    wg, wu, wd = (p["experts"]["gate"], p["experts"]["up"],
+                  p["experts"]["down"])
+    outs = []
+    for e in range(E):
+        x_e = xe[:, e].reshape(G * C, d).astype(compute_dtype)
+        h = (kops.gemm_wq(x_e, wg.q[e], wg.scales[e], act="silu")
+             * kops.gemm_wq(x_e, wu.q[e], wu.scales[e])).astype(compute_dtype)
+        y = kops.gemm_wq(h, wd.q[e], wd.scales[e])
+        outs.append(y.reshape(G, C, d))
+    return jnp.stack(outs, axis=1).astype(compute_dtype)
+
+
 def _expert_ffn(p: Params, xe, act: str, compute_dtype, part=None):
     """xe: (G, E, C, d) -> (G, E, C, d) through per-expert gated FFN.
 
     Sharding: expert-parallel over 'model' when E divides the axis (deepseek-
     moe's 64); otherwise the packed capacity dim is sharded instead (qwen2-
     moe's 60 experts) — C is rounded up to the axis size by the caller.
+    Quantized expert weights (QuantTensor — see repro.quant) dequantize via
+    ``astype`` on the XLA path; under an explicit kernel scope the local
+    path dispatches the weight-quantized grouped GEMM instead.
     """
+    from repro.quant import QuantTensor
+
+    if (part is None and isinstance(p["experts"]["gate"], QuantTensor)
+            and kdispatch.kernel_scope_active()):
+        return _expert_ffn_wq(p, xe.astype(compute_dtype), compute_dtype)
     w_g = p["experts"]["gate"].astype(compute_dtype)
     w_u = p["experts"]["up"].astype(compute_dtype)
     w_d = p["experts"]["down"].astype(compute_dtype)

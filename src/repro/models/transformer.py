@@ -353,13 +353,22 @@ def encode(params: Params, cfg: ModelConfig, frames, *, part=None):
 # public entry points
 # ==========================================================================
 def embed_tokens(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    from repro.quant import QuantTensor
+
     table = params["embed"]["table"]
     dt = jnp.dtype(cfg.dtype)
-    if table.dtype != dt:
-        # cast BEFORE the (vocab-sharded) gather: the lookup's masked
-        # partial-gather + psum then moves compute-dtype bytes, not fp32
-        table = table.astype(dt)
-    x = table[tokens]
+    if isinstance(table, QuantTensor):
+        # quantized table (per-row scales, axis=-1): gather the int8/fp8
+        # rows and their scales FIRST, dequantize only the looked-up rows —
+        # never materialize the full dequantized (vocab, d) table per step
+        x = (table.q[tokens].astype(jnp.float32)
+             * table.scales[tokens].astype(jnp.float32)).astype(dt)
+    else:
+        if table.dtype != dt:
+            # cast BEFORE the (vocab-sharded) gather: the lookup's masked
+            # partial-gather + psum then moves compute-dtype bytes, not fp32
+            table = table.astype(dt)
+        x = table[tokens]
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     if extra_embeds is not None:  # vlm: prepend patch embeddings

@@ -1,0 +1,30 @@
+"""Multi-precision quantization subsystem (paper: 8-to-64-bit compute).
+
+Public surface:
+
+* :class:`QuantTensor` — weight-only quantized parameter container (pytree;
+  ``astype`` dequantizes so existing call sites work unchanged);
+* :func:`quantize_params` — post-load transform keyed off
+  ``ModelConfig.weight_dtype`` / ``quant_block``;
+* absmax quantizers: :func:`quantize_weight` / :func:`quantize_tensor`
+  (per-channel / per-block), :func:`quantize_kv` / :func:`dequantize_kv`
+  (per-row, the paged KV cache), :func:`quantize_int8` (whole-tensor scalar
+  scale — shared with ``core/collectives.py`` gradient compression);
+* sizing helpers: :func:`dtype_bytes`, :func:`param_bytes`.
+
+The matching compute paths live in the kernel registry (``gemm_wq``,
+quantized ``paged_attention`` — see docs/backends.md) and the cache layout
+in ``models/cache.py`` (see docs/quantization.md).
+"""
+from repro.quant.params import (is_quantized, param_bytes, quantize_params)
+from repro.quant.tensor import (QUANT_DTYPES, QuantTensor, canonical_dtype,
+                                dequantize_kv, dequantize_weight, dtype_bytes,
+                                is_quant_dtype, quantize_int8, quantize_kv,
+                                quantize_tensor, quantize_weight)
+
+__all__ = [
+    "QUANT_DTYPES", "QuantTensor", "canonical_dtype", "dequantize_kv",
+    "dequantize_weight", "dtype_bytes", "is_quant_dtype", "is_quantized",
+    "param_bytes", "quantize_int8", "quantize_kv", "quantize_params",
+    "quantize_tensor", "quantize_weight",
+]

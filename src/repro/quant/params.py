@@ -1,0 +1,120 @@
+"""Post-load parameter quantization keyed off ``ModelConfig`` knobs.
+
+``quantize_params(params, cfg)`` walks a model's parameter pytree and wraps
+every matmul weight in a :class:`~repro.quant.tensor.QuantTensor` according
+to ``cfg.weight_dtype`` (int8 / fp8-e4m3) and ``cfg.quant_block`` (0 =
+per-channel, > 0 = per-block scales along the contraction axis). It is a
+*serving-side* transform: training and SPMD graphs keep the dense master
+weights (the Pallas kernels and the dequant paths are forward-only).
+
+What gets quantized:
+
+* every ``.../<module>/kernel`` leaf with ndim >= 2 — attention q/k/v/o
+  projections, dense and MoE-shared MLPs, lm_head, recurrent in/out/gate
+  projections (block-diagonal gates included; they are matmul weights too);
+* the stacked MoE expert tensors ``experts/{gate,up,down}`` (per-expert,
+  per-channel scales);
+* the embedding table (``embed/table``), quantized **per row** (axis=-1) so
+  the token gather dequantizes row-local scales and — for tied embeddings —
+  the ``table.T`` lm-head matmul sees per-output-channel scales.
+
+What stays dense: norms, biases, depthwise-conv kernels (indexed per tap,
+not matmul'd), the MoE router (routing argmax is precision-sensitive and
+the tensor is tiny), recurrent Lambda/A_log/D vectors, positional tables.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.quant.tensor import (QuantTensor, canonical_dtype, is_quant_dtype,
+                                quantize_tensor)
+
+PyTree = Any
+
+#: Module keys whose "kernel" leaf must stay dense.
+_SKIP_MODULES = frozenset({"conv", "router"})
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _should_quantize(keys: list[str], leaf) -> tuple[bool, int]:
+    """-> (quantize?, contraction axis)."""
+    if getattr(leaf, "ndim", 0) < 2:
+        return False, -2
+    last = keys[-1]
+    if last == "kernel":
+        if any(k in _SKIP_MODULES for k in keys):
+            return False, -2
+        return True, -2
+    if last == "table" and "embed" in keys and "pos_embed" not in keys \
+            and "encoder" not in keys:
+        return True, -1                       # per-row embedding scales
+    if keys[-1] in ("gate", "up", "down") and "experts" in keys:
+        return True, -2                       # stacked (E, d, f) experts
+    return False, -2
+
+
+def quantize_params(params: PyTree, cfg=None, *, dtype: str | None = None,
+                    block: int | None = None,
+                    include_embed: bool = True) -> PyTree:
+    """Wrap matmul weights in :class:`QuantTensor` containers.
+
+    ``cfg`` supplies ``weight_dtype`` / ``quant_block`` (overridable by the
+    explicit kwargs). Idempotent: already-wrapped leaves pass through. A
+    no-op (returns ``params``) when no quant dtype is configured.
+    """
+    dtype = dtype if dtype is not None else getattr(cfg, "weight_dtype", "")
+    block = block if block is not None else getattr(cfg, "quant_block", 0)
+    if not dtype:
+        return params
+    dtype = canonical_dtype(dtype)
+
+    def f(path, leaf):
+        if isinstance(leaf, QuantTensor):
+            return leaf
+        keys = _path_keys(path)
+        do, axis = _should_quantize(keys, leaf)
+        if not do or (axis == -1 and not include_embed):
+            return leaf
+        # the embedding table is strictly per-row (one scale per token id):
+        # the gather path multiplies q[tokens] by scales[tokens] directly
+        return quantize_tensor(leaf, dtype,
+                               block=0 if axis == -1 else block, axis=axis)
+
+    return jax.tree_util.tree_map_with_path(
+        f, params, is_leaf=lambda x: isinstance(x, QuantTensor))
+
+
+def is_quantized(params: PyTree) -> bool:
+    return any(isinstance(x, QuantTensor)
+               for x in jax.tree.leaves(
+                   params, is_leaf=lambda x: isinstance(x, QuantTensor)))
+
+
+def param_bytes(params: PyTree) -> int:
+    """Storage bytes of a parameter tree (QuantTensor counts q + scales)."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantTensor)):
+        if isinstance(leaf, QuantTensor):
+            total += leaf.nbytes
+        else:
+            total += int(leaf.size * leaf.dtype.itemsize)
+    return total
+
+
+__all__ = ["is_quant_dtype", "is_quantized", "param_bytes", "quantize_params"]

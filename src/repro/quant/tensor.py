@@ -1,0 +1,229 @@
+"""Quantized parameter containers and absmax quantizers.
+
+Occamy's defining capability is 8-to-64-bit multi-precision compute: the
+silicon doubles throughput every time precision halves (paper Fig. 4b / the
+Ogopogo compute-density argument). The software analogue here is *weight-only
+post-training quantization*: master weights stay fp32/bf16 for training, and
+a post-load transform (:func:`repro.quant.params.quantize_params`) wraps the
+matmul weights in :class:`QuantTensor` — int8 or fp8-e4m3 storage plus
+per-channel (optionally per-block) fp32 absmax scales.
+
+``QuantTensor`` is a registered JAX pytree whose ``astype`` *dequantizes*, so
+every existing call site of the form ``p["q_proj"]["kernel"].astype(dtype)``
+keeps working unchanged (weight-only quantization: compute happens at the
+activation dtype). Call sites that want the fused in-tile dequant path
+(``models/layers.py:dense``, the MoE expert FFN) detect the container and
+dispatch the ``gemm_wq`` registry op instead.
+
+Calibration is plain absmax (symmetric, zero-point-free):
+
+  * int8: ``scale = amax / 127``, values rounded and clipped to [-127, 127];
+  * fp8-e4m3: ``scale = amax / 448`` (e4m3's max normal), values cast.
+
+``block > 0`` splits the contraction axis into ``K // block`` groups with one
+scale each — narrower groups bound the absmax blast radius of outlier
+channels, the usual int8 accuracy knob.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Storage dtypes the subsystem understands, with accepted aliases.
+QUANT_DTYPES = ("int8", "float8_e4m3fn")
+_ALIASES = {"fp8": "float8_e4m3fn", "e4m3": "float8_e4m3fn",
+            "float8": "float8_e4m3fn", "int8": "int8",
+            "float8_e4m3fn": "float8_e4m3fn"}
+#: Largest representable magnitude per storage dtype.
+_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0}
+_EPS = 1e-12
+
+
+def canonical_dtype(name: str) -> str:
+    """Normalize a quant dtype alias ("fp8" -> "float8_e4m3fn")."""
+    if name not in _ALIASES:
+        raise ValueError(f"unknown quant dtype {name!r}; expected one of "
+                         f"{sorted(set(_ALIASES))}")
+    return _ALIASES[name]
+
+
+def is_quant_dtype(name: str) -> bool:
+    return bool(name) and name in _ALIASES
+
+
+def dtype_bytes(name: str) -> int:
+    """Storage bytes per element for any dtype name (quant aliases included).
+    Used by the roofline/memfloor byte terms (core/roofline.py)."""
+    if is_quant_dtype(name):
+        name = canonical_dtype(name)
+    return jnp.dtype(name).itemsize
+
+
+def _storage_dtype(name: str):
+    return jnp.dtype(canonical_dtype(name))
+
+
+def _cast_q(x, dtype: str):
+    """fp32 scaled values -> storage dtype (round+clip for int8, cast for
+    fp8: the e4m3 cast saturates)."""
+    if dtype == "int8":
+        return jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    return x.astype(jnp.float8_e4m3fn)
+
+
+# --------------------------------------------------------------------------
+# scalar-scale int8 — the one absmax implementation shared with
+# core/collectives.py's gradient compression (one quantizer, many callers)
+# --------------------------------------------------------------------------
+def quantize_int8(x: jnp.ndarray):
+    """Whole-tensor absmax int8: returns (q int8, scalar fp32 scale)."""
+    amax = jnp.max(jnp.abs(x)) + _EPS
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# --------------------------------------------------------------------------
+# weight quantization (per-channel / per-block along a contraction axis)
+# --------------------------------------------------------------------------
+def quantize_weight(w, dtype: str = "int8", *, block: int = 0,
+                    axis: int = -2):
+    """Quantize ``w`` along ``axis`` (the matmul contraction axis).
+
+    Returns ``(q, scales)`` where ``q`` has ``w``'s shape in the storage
+    dtype and ``scales`` (float16 — its rounding is ~8x below the int8
+    step, and narrow scales keep the container's byte overhead at
+    ``2 / block`` per element) has the same shape except ``axis`` reduced
+    to ``n_blocks`` (= 1 per-channel, or ``K // block`` when ``block``
+    divides the axis; a non-dividing ``block`` falls back to per-channel).
+    """
+    dtype = canonical_dtype(dtype)
+    axis = axis % w.ndim
+    K = w.shape[axis]
+    nb = K // block if block and K % block == 0 else 1
+    kb = K // nb
+    wf = w.astype(jnp.float32)
+    # view blocks: (..., nb, kb, ...) with the block pair at `axis`
+    shape = w.shape[:axis] + (nb, kb) + w.shape[axis + 1:]
+    wb = wf.reshape(shape)
+    amax = jnp.max(jnp.abs(wb), axis=axis + 1) + _EPS      # (..., nb, ...)
+    scales = (amax / _QMAX[dtype]).astype(jnp.float16)
+    q = _cast_q(wb / jnp.expand_dims(scales.astype(jnp.float32), axis + 1),
+                dtype)
+    return q.reshape(w.shape), scales
+
+
+def dequantize_weight(q, scales, *, axis: int = -2, dtype=jnp.float32):
+    """Inverse of :func:`quantize_weight` (up to quantization error)."""
+    axis = axis % q.ndim
+    nb = scales.shape[axis]
+    kb = q.shape[axis] // nb
+    shape = q.shape[:axis] + (nb, kb) + q.shape[axis + 1:]
+    out = q.astype(jnp.float32).reshape(shape) * jnp.expand_dims(
+        scales.astype(jnp.float32), axis + 1)
+    return out.reshape(q.shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# KV-row quantization (paged cache): one scale per written row per head
+# --------------------------------------------------------------------------
+def quantize_kv(x, dtype: str = "int8"):
+    """x: (..., hd) float K/V rows -> (q (..., hd), scales (...) float16).
+
+    One absmax scale per (row, head): decode writes one token at a time, so
+    per-row scales need no calibration pass and stay exact under incremental
+    writes. Scales are stored float16 — the pool bookkeeping overhead is
+    ``2 / head_dim`` bytes per element.
+    """
+    dtype = canonical_dtype(dtype)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1) + _EPS
+    scales = (amax / _QMAX[dtype]).astype(jnp.float16)
+    q = _cast_q(xf / scales.astype(jnp.float32)[..., None], dtype)
+    return q, scales
+
+
+def dequantize_kv(q, scales, dtype=jnp.float32):
+    """Inverse of :func:`quantize_kv`: (..., hd) q + (...) scales."""
+    return (q.astype(jnp.float32)
+            * scales.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# the container
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_with_keys_class
+class QuantTensor:
+    """Weight-only quantized parameter: storage values + absmax scales.
+
+    A registered pytree (leaves ``q`` and ``scales``), so it flows through
+    ``jax.tree`` maps, ``jax.lax.scan`` over stacked layer blocks (both
+    leaves slice on the leading axis together), jit argument flattening, and
+    path-based checkpointing (leaf keys ``....q`` / ``....scales``) without
+    special cases. ``axis`` (static aux data) is the contraction axis the
+    scales reduce, counted from the end: -2 for ``(K, N)`` matmul kernels,
+    -1 for the per-row-quantized embedding table.
+    """
+
+    def __init__(self, q, scales, axis: int = -2):
+        self.q = q
+        self.scales = scales
+        self.axis = axis
+
+    # ---- pytree protocol --------------------------------------------------
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("q"), self.q),
+                 (jax.tree_util.GetAttrKey("scales"), self.scales)),
+                self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scales = children
+        return cls(q, scales, axis=aux)
+
+    # ---- array-like surface (what model call sites touch) ----------------
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.q.size * self.q.dtype.itemsize
+                   + self.scales.size * self.scales.dtype.itemsize)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.scales.shape[self.axis % self.q.ndim]
+
+    def dequantize(self, dtype=jnp.float32):
+        return dequantize_weight(self.q, self.scales, axis=self.axis,
+                                 dtype=dtype)
+
+    def astype(self, dtype):
+        """Dequantize — keeps ``p[...]["kernel"].astype(compute_dtype)``
+        call sites working unchanged (weight-only quantization)."""
+        return self.dequantize(dtype)
+
+    @property
+    def T(self):
+        """Dequantized transpose (tied-embedding logits: ``embed.table.T``)."""
+        return self.dequantize(jnp.float32).T
+
+    def __repr__(self):
+        return (f"QuantTensor(shape={tuple(self.q.shape)}, "
+                f"dtype={self.q.dtype}, n_blocks={self.n_blocks}, "
+                f"axis={self.axis})")
+
+
+def quantize_tensor(w, dtype: str = "int8", *, block: int = 0,
+                    axis: int = -2) -> QuantTensor:
+    q, scales = quantize_weight(w, dtype, block=block, axis=axis)
+    return QuantTensor(q, scales, axis=axis)

@@ -43,7 +43,8 @@ from repro.configs.base import ModelConfig
 from repro.kernels import dispatch as kdispatch
 from repro.models import decode_step, extend_step, forward, logits_fn
 from repro.models.cache import default_n_blocks, init_cache, kv_bytes, \
-    pages_per_slot
+    n_blocks_for_bytes, pages_per_slot
+from repro.quant import is_quant_dtype, quantize_params
 
 PyTree = Any
 
@@ -121,7 +122,8 @@ class ServeEngine:
                  part=None, kernel_backend: str | None = None,
                  paged: bool | None = None, page_size: int | None = None,
                  prefill_chunk: int | None = None,
-                 max_blocks: int | None = None):
+                 max_blocks: int | None = None,
+                 kv_budget_bytes: int | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
@@ -132,6 +134,24 @@ class ServeEngine:
         if self.paged and part is not None:
             raise ValueError("paged serving is local-only: SPMD serving "
                              "keeps the dense layout")
+        # multi-precision serving (repro.quant): post-load weight
+        # quantization keyed off cfg.weight_dtype — local-only (SPMD graphs
+        # keep the dense master params), applied here so callers need no
+        # separate transform step
+        if cfg.weight_dtype:
+            if part is not None:
+                raise ValueError("weight quantization is local-only: SPMD "
+                                 "serving keeps the dense master params")
+            self.params = quantize_params(params, cfg)
+        if is_quant_dtype(cfg.kv_dtype):
+            if not self.paged:
+                raise ValueError(
+                    "kv_dtype requires the paged (block-pool) cache layout: "
+                    "per-row scales live alongside the pools")
+            if cfg.encoder is not None:
+                raise ValueError(
+                    "quantized KV does not support enc-dec models: the "
+                    "whole-prompt prefill commit path writes dense rows")
         # kernel selection for the engine's jitted graphs: explicit arg >
         # cfg.kernel_backend; block tuning comes from the strategy when
         # serving under a Partitioner. Fixed for the engine's lifetime (the
@@ -144,8 +164,17 @@ class ServeEngine:
                                else None)
         self.rng = jax.random.PRNGKey(seed)
         if self.paged:
-            n_blocks = (max_blocks or cfg.max_blocks
-                        or default_n_blocks(max_slots, max_len, self.page_size))
+            if kv_budget_bytes is not None:
+                # size the pool by HBM budget through the cache's sizing
+                # helper: the narrower the KV dtype, the more blocks the
+                # same budget admits (dense-equivalent count is the cap)
+                n_blocks = min(
+                    n_blocks_for_bytes(cfg, kv_budget_bytes, self.page_size),
+                    default_n_blocks(max_slots, max_len, self.page_size))
+            else:
+                n_blocks = (max_blocks or cfg.max_blocks
+                            or default_n_blocks(max_slots, max_len,
+                                                self.page_size))
             # pool leaves must be distinguishable from batch-sized leaves,
             # and a pool smaller than the slot count cannot serve anyway
             self.n_blocks = max(n_blocks, max_slots + 1)
@@ -299,17 +328,31 @@ class ServeEngine:
                 n_tokens = len(req.prompt) + req.max_new_tokens
                 if n_tokens > self.max_len:
                     self.queue.popleft()
-                    self._reject(req, "exceeds max_len")
+                    self._reject(req, f"exceeds max_len: prompt+budget "
+                                      f"{n_tokens} tokens > {self.max_len}")
                     continue
                 legacy = (self.cfg.encoder is not None
                           or req.frames is not None
                           or req.extra_embeds is not None
                           or self.part is not None)
+                if legacy and is_quant_dtype(self.cfg.kv_dtype):
+                    # the whole-prompt prefill commit writes dense rows —
+                    # incompatible with quantized pools
+                    self.queue.popleft()
+                    self._reject(req, "quantized KV serves chunked-prefill "
+                                      "requests only (no frames/embeds)")
+                    continue
                 if self.paged:
                     need = self.allocator.pages_for(n_tokens)
                     if need > self.allocator.capacity:
+                        cap = self.allocator.capacity
                         self.queue.popleft()
-                        self._reject(req, "exceeds block pool")
+                        self._reject(
+                            req,
+                            f"exceeds block pool: needs {need} blocks "
+                            f"({need * self._block_kv_bytes} KV bytes) > "
+                            f"capacity {cap} blocks "
+                            f"({cap * self._block_kv_bytes} KV bytes)")
                         continue
                     if need > self.allocator.n_free:
                         return                    # wait for blocks to free

@@ -28,8 +28,12 @@ def _rand(shape, dtype=jnp.float32, seed=0, scale=1.0):
 
 def _op_calls(dtype):
     """One canonical invocation per registered op (thunks)."""
+    from repro.quant import quantize_tensor
+
     x = _rand((48, 40), dtype)
     w = _rand((40, 56), dtype, seed=1)
+    wq = quantize_tensor(_rand((40, 56), jnp.float32, seed=1), "int8",
+                         block=20)
     q = _rand((4, 48, 16), dtype, scale=0.5)
     k = _rand((2, 48, 16), dtype, seed=1, scale=0.5)
     v = _rand((2, 48, 16), dtype, seed=2)
@@ -45,6 +49,8 @@ def _op_calls(dtype):
     lengths = jnp.asarray([5, 17, 30], jnp.int32)
     return {
         "gemm": lambda: ops.gemm(x, w, scale=0.5, act="gelu"),
+        "gemm_wq": lambda: ops.gemm_wq(x, wq.q, wq.scales, scale=0.5,
+                                       act="gelu"),
         "flash_attention": lambda: ops.flash_attention(q, k, v, causal=True),
         "lru_scan": lambda: ops.lru_scan(a, b),
         "gather_rows": lambda: ops.gather_rows(table, idx),
@@ -61,7 +67,7 @@ def _op_calls(dtype):
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("op", sorted(
-    ["gemm", "flash_attention", "lru_scan", "gather_rows",
+    ["gemm", "gemm_wq", "flash_attention", "lru_scan", "gather_rows",
      "packed_gather_rows", "instream_scale_reduce", "paged_attention"]))
 def test_registry_parity_interpret_vs_ref(op, dtype):
     calls = _op_calls(dtype)
