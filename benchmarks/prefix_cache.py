@@ -1,0 +1,162 @@
+"""Prefix-cache benchmark: shared-system-prompt trace, warm vs cold.
+
+The headline serving scenario the block-sharing stack exists for: every
+request opens with the same long system prompt (multi-turn chat, agentic
+tool preambles), so with the prefix cache warm only the short unique tail
+ever runs prefill — matched pages map read-only out of the radix index.
+
+Asserts the paper-anchored directional claims (bytes and FLOPs both scale
+with *unique* tokens, the serving analogue of the Occamy line's
+amortize-the-shared-structure argument):
+
+  * warm prefix-hit throughput >= 1.5x the cold (prefix-cache-off) run on
+    the identical trace — prefill chunks collapse to tail-only,
+  * fresh KV bytes/request drop (shared pages are never re-stored),
+  * greedy outputs are token-for-token identical with the cache on or off
+    (sharing is a memory/scheduling optimization, never a semantics one),
+  * the pool drains leak-free: free + cached blocks == capacity.
+
+``--dry-run`` imports the serving stack and checks the prefix index
+wiring without running the trace (the CI smoke step).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+
+SYS_LEN = 112      # shared system prompt: 14 pages at page_size 8
+PAGE = 8
+N_REQS = 8
+
+
+def _trace(cfg, seed: int = 0):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, SYS_LEN).astype(np.int32)
+    reqs = []
+    for i in range(N_REQS):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 10))).astype(np.int32)
+        # short generations: the trace is prefill-heavy by design — the
+        # quantity under test is the skipped prefix work, not decode
+        reqs.append(Request(uid=i, prompt=np.concatenate([sys_prompt, tail]),
+                            max_new_tokens=int(rng.integers(2, 4))))
+    return sys_prompt, reqs
+
+
+def main(dry_run: bool = False) -> None:
+    if dry_run:
+        from repro.serve import (BlockAllocator, PrefixIndex,  # noqa: F401
+                                 ServeEngine, page_hashes)
+        alloc = BlockAllocator(8, PAGE)
+        index = PrefixIndex(PAGE)
+        alloc.evictor = index
+        [blk] = alloc.alloc(1)
+        toks = np.arange(PAGE, dtype=np.int32)
+        index.publish(toks, [blk])
+        assert index.lookup(toks, alloc) == [blk]
+        assert len(page_hashes(np.arange(3 * PAGE), PAGE)) == 3
+        alloc.decref(blk, retain=True)
+        alloc.decref(blk, retain=True)
+        assert index.evict_one(alloc) and alloc.n_free == alloc.capacity
+        print("prefix-cache dry-run OK")
+        return
+
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models import init
+    from repro.serve import Request, ServeEngine
+
+    cfg = reduced(get_arch("qwen3-0.6b")).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, dtype="float32")
+    params = init(jax.random.PRNGKey(0), cfg)
+    sys_prompt, reqs = _trace(cfg)
+    n_prompt = sum(len(r.prompt) for r in reqs)
+
+    rows, tokens = [], {}
+    for mode in ("cold", "warm"):
+        engine = ServeEngine(cfg, params, max_slots=4, max_len=128,
+                             paged=True, page_size=PAGE, prefill_chunk=16,
+                             prefix_cache=(mode == "warm"))
+        # warm the jit caches on BOTH engines (and, for `warm`, the prefix
+        # index) before the timed runs, so the ratio measures serving work,
+        # not compilation
+        engine.run([Request(uid=99, prompt=sys_prompt, max_new_tokens=2)])
+        kv0 = engine.stats["kv_bytes_alloc"]
+        ch0 = engine.stats["prefill_chunks"]
+        hits0 = engine.stats["prefix_hits"]
+        # best-of-3 timing damps shared-runner noise; the deterministic
+        # counters (chunks, bytes, hits) come from the first attempt, and
+        # greedy outputs must agree across every attempt
+        best_dt, first = float("inf"), None
+        for attempt in range(3):
+            trace = [Request(uid=r.uid, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens) for r in reqs]
+            t0 = time.perf_counter()
+            results = engine.run(trace)
+            dt = time.perf_counter() - t0
+            assert all(r.finish_reason == "length" for r in results)
+            toks = [r.tokens for r in results]
+            if attempt == 0:
+                first = {
+                    "chunks": engine.stats["prefill_chunks"] - ch0,
+                    "hits": engine.stats["prefix_hits"] - hits0,
+                    "hit_tokens": engine.stats["prefix_hit_tokens"],
+                    "kv_per_req": (engine.stats["kv_bytes_alloc"] - kv0)
+                    // len(results),
+                }
+                tokens[mode] = toks
+            assert toks == tokens[mode], "greedy outputs drifted across runs"
+            best_dt = min(best_dt, dt)
+        new_tokens = sum(len(t) for t in tokens[mode])
+        cached = (engine.prefix_index.n_evictable(engine.allocator)
+                  if engine.prefix_index is not None else 0)
+        assert engine.allocator.n_live == 0
+        assert engine.allocator.n_free + cached == engine.allocator.capacity
+        rows.append({
+            "mode": mode,
+            "requests": len(reqs),
+            "prompt_tokens": n_prompt,
+            "new_tokens": new_tokens,
+            "tok_per_s": round((n_prompt + new_tokens) / best_dt, 1),
+            "prefill_chunks": first["chunks"],
+            "prefix_hits": first["hits"],
+            "prefix_hit_tokens": first["hit_tokens"],
+            "kv_bytes_per_request": first["kv_per_req"],
+            "kv_bytes_cached": engine.stats["kv_bytes_cached"],
+        })
+    emit(rows, "prefix_cache")
+
+    cold, warm = rows
+    assert tokens["warm"] == tokens["cold"], \
+        "prefix cache changed greedy outputs"
+    assert warm["prefix_hits"] == N_REQS, \
+        f"every request should hit the warmed prefix: {warm['prefix_hits']}"
+    assert warm["prefix_hit_tokens"] >= N_REQS * SYS_LEN
+    # deterministic gate first: matched pages skip their prefill chunks and
+    # are never re-stored — these hold on any machine
+    assert warm["prefill_chunks"] * 2 < cold["prefill_chunks"], (
+        "prefix hits should collapse prefill to tail-only chunks: "
+        f"{warm['prefill_chunks']} vs {cold['prefill_chunks']}")
+    assert warm["kv_bytes_per_request"] < cold["kv_bytes_per_request"], (
+        "shared pages should not be re-stored: "
+        f"{warm['kv_bytes_per_request']} vs {cold['kv_bytes_per_request']}")
+    speedup = warm["tok_per_s"] / cold["tok_per_s"]
+    assert speedup >= 1.5, (
+        f"prefix-hit throughput should be >= 1.5x cold prefill: "
+        f"{warm['tok_per_s']} vs {cold['tok_per_s']} ({speedup:.2f}x)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="import + prefix-index wiring check only (CI smoke)")
+    args = ap.parse_args()
+    main(dry_run=args.dry_run)

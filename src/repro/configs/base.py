@@ -137,6 +137,14 @@ class ModelConfig:
     page_size: int = 16
     prefill_chunk: int = 64
     max_blocks: int = 0
+    # prefix caching (repro.serve.prefix): share fully-written prompt pages
+    # of the block pool across requests (refcounted, copy-on-write) and
+    # skip prefill for matched pages. ``prefix_lru`` caps how many
+    # refcount-0 cached blocks the index retains after their owners finish
+    # (0 = bounded only by pool pressure). Paged all-full-attention decoder
+    # configs only; others serve cold.
+    prefix_cache: bool = False
+    prefix_lru: int = 0
     # kernel selection flows through the backend registry
     # (repro.kernels.dispatch): "" keeps the pure-XLA paths (the only option
     # for training — kernel backends are forward/inference paths); "auto"
@@ -163,6 +171,8 @@ class ModelConfig:
                 "'auto', 'ref', 'interpret', or 'pallas'")
         if self.page_size < 1 or self.prefill_chunk < 1:
             raise ValueError("page_size and prefill_chunk must be >= 1")
+        if self.prefix_lru < 0:
+            raise ValueError("prefix_lru must be >= 0")
         _quant_names = ("", "int8", "fp8", "float8_e4m3fn")
         for field_name in ("weight_dtype", "kv_dtype"):
             if getattr(self, field_name) not in _quant_names:

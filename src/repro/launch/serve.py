@@ -43,6 +43,16 @@ def main(argv=None):
     ap.add_argument("--max-blocks", type=int, default=None,
                     help="global KV block-pool size (default: dense-"
                          "equivalent capacity)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="share fully-written prompt pages across requests "
+                         "(refcounted copy-on-write; requires --paged and "
+                         "an all-full-attention config; default: "
+                         "cfg.prefix_cache)")
+    ap.add_argument("--prefix-lru", type=int, default=None,
+                    help="max refcount-0 cached blocks retained after "
+                         "their owners finish (0 = bounded only by pool "
+                         "pressure; default: cfg.prefix_lru)")
     ap.add_argument("--weight-dtype", default=None,
                     choices=("int8", "fp8"),
                     help="weight-only quantization (repro.quant): wraps "
@@ -68,7 +78,9 @@ def main(argv=None):
                          kernel_backend=args.kernel_backend,
                          paged=args.paged, page_size=args.page_size,
                          prefill_chunk=args.prefill_chunk,
-                         max_blocks=args.max_blocks)
+                         max_blocks=args.max_blocks,
+                         prefix_cache=args.prefix_cache,
+                         prefix_lru=args.prefix_lru)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -100,6 +112,11 @@ def main(argv=None):
         "prefill_chunks": engine.stats["prefill_chunks"],
         "prefill_recompiles": engine.stats["prefill_recompiles"],
         "paged": engine.paged,
+        "prefix_cache": engine.prefix_cache,
+        "prefix_hits": engine.stats["prefix_hits"],
+        "prefix_hit_tokens": engine.stats["prefix_hit_tokens"],
+        "prefix_cow": engine.stats["prefix_cow"],
+        "kv_bytes_cached": engine.stats["kv_bytes_cached"],
         "kv_bytes_per_request": (engine.stats["kv_bytes_alloc"]
                                  // max(len(results), 1)),
     }, indent=1))

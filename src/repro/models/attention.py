@@ -401,7 +401,7 @@ def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
 
 def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
                      is_local: bool, pos, n_valid, slot, compute_dtype,
-                     block_tables=None):
+                     block_tables=None, first_new_pos=0):
     """Extend ONE slot's cache by up to T tokens (chunked prefill).
 
     x: (1, T, d) tokens at absolute positions ``pos .. pos+T-1``; the first
@@ -414,7 +414,14 @@ def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
     Attention reads combine a pre-write snapshot of the slot's cache (old
     positions ``< pos``) with the chunk's own K/V under an intra-chunk
     causal (and sliding-window) mask — so ring buffers stay exact even when
-    the chunk wraps the window. Returns (out (1, T, d), new_cache).
+    the chunk wraps the window.
+
+    ``first_new_pos`` (traced scalar) is the absolute position prefill
+    started at: with prefix caching the paged snapshot rows below it were
+    *mapped* from shared blocks (valid, readable mid-sequence), while in
+    the dense layout nothing below it was ever written by this request —
+    the snapshot mask keeps those stale rows of a reused slot out of the
+    scores. Returns (out (1, T, d), new_cache).
     """
     T = x.shape[1]
     hd, H, K = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
@@ -507,7 +514,11 @@ def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
         }
 
     # scores over [old snapshot | chunk] keys; masks are (T, S_old) / (T, T)
-    mask_old = ((old_pos >= 0) & (old_pos < pos))[None, :]
+    # — paged snapshots are readable from position 0 (prefix-shared blocks
+    # hold valid rows below first_new_pos); dense snapshots only from
+    # first_new_pos (rows below it belong to the slot's previous occupant)
+    snap_lo = 0 if block_tables is not None else first_new_pos
+    mask_old = ((old_pos >= snap_lo) & (old_pos < pos))[None, :]
     mask_old = jnp.broadcast_to(mask_old, (T, old_pos.shape[0]))
     mask_new = i[None, :] <= i[:, None]                       # intra-chunk
     if is_local and cfg.window:

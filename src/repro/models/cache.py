@@ -126,6 +126,31 @@ def kv_bytes(cache, *, pool_n_blocks: int | None = None) -> int:
     return total
 
 
+def copy_block(cache, src, dst, n_blocks: int):
+    """Copy pool block ``src`` into ``dst`` across every paged pool leaf —
+    K, V, *and* the per-row quantization scales, which is what lets shared
+    quantized pages round-trip exactly through prefix-cache copy-on-write.
+
+    ``src``/``dst`` may be traced scalars (the serve engine jits this with
+    the cache donated, so the copy cost is one page's rows, not the pool).
+    Non-pool leaves (dense KV, ring buffers, recurrent states, cross
+    caches) pass through untouched.
+    """
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if "self" not in keys:
+            return leaf
+        axis = 1 if "blocks" in keys else 0
+        if leaf.shape[axis] != n_blocks:
+            return leaf
+        if axis == 0:
+            return leaf.at[dst].set(leaf[src])
+        return leaf.at[:, dst].set(leaf[:, src])
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
 def pages_per_slot(max_len: int, page_size: int) -> int:
     return -(-max_len // page_size)
 

@@ -141,14 +141,16 @@ def _mask_state(new, old, active):
 def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
                  positions, enc_out, cache, pos, mode: str, compute_dtype,
                  part=None, active=None, block_tables=None, slot=None,
-                 n_valid=None):
+                 n_valid=None, first_new_pos=0):
     """mode: 'full' (train/prefill, builds cache) | 'decode' (single step)
     | 'extend' (chunked prefill: T tokens for ONE slot of the pooled cache).
 
     Decode extras: ``active`` ((B,) bool) gates per-slot cache writes;
     ``block_tables`` ((B, P) int32) selects the paged KV layout for full-
-    attention layers. Extend extras: ``slot``/``n_valid`` (traced scalars).
-    Returns (x, new_cache_entry, aux_loss).
+    attention layers. Extend extras: ``slot``/``n_valid``/``first_new_pos``
+    (traced scalars) — ``first_new_pos`` is where this request's prefill
+    started (> 0 when a prefix-cache hit mapped the head of the sequence
+    from shared blocks). Returns (x, new_cache_entry, aux_loss).
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -166,7 +168,7 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
             out, new_self = attn_mod.attention_extend(
                 lp["attn"], cfg, h, cache["self"], is_local=is_local, pos=pos,
                 n_valid=n_valid, slot=slot, compute_dtype=compute_dtype,
-                block_tables=bt)
+                block_tables=bt, first_new_pos=first_new_pos)
             new_cache["self"] = new_self
         else:
             out, new_self = attn_mod.attention_decode(
@@ -180,9 +182,14 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
         if mode == "extend":
             st = _slot_state(cache["rec"], slot)
             # first chunk of a (possibly reused) slot starts from zero state
-            # — KV rows are position-masked, but recurrent carries are not
+            # — KV rows are position-masked, but recurrent carries are not.
+            # The first chunk starts at first_new_pos (0 without a
+            # prefix-cache hit; recurrent layers are prefix-incapable, so
+            # today this is always pos > 0, kept general for a future
+            # carry-restoring cache)
             st = jax.tree.map(
-                lambda l: jnp.where(pos > 0, l, jnp.zeros_like(l)), st)
+                lambda l: jnp.where(pos > first_new_pos, l,
+                                    jnp.zeros_like(l)), st)
             out, new_state = fwd(lp[key], cfg, h, state=st,
                                  compute_dtype=compute_dtype, part=part,
                                  single_step=False, valid_len=n_valid)
@@ -264,7 +271,8 @@ def _store_kv(cfg: ModelConfig, k, v, is_local: bool, template):
 # ==========================================================================
 def _apply_layers(params: Params, cfg: ModelConfig, x, *, positions, enc_out,
                   cache, pos, mode: str, part=None, active=None,
-                  block_tables=None, slot=None, n_valid=None):
+                  block_tables=None, slot=None, n_valid=None,
+                  first_new_pos=0):
     compute_dtype = jnp.dtype(cfg.dtype)
     prefix, pattern, n_rep, rem = cfg.layer_specs()
     aux_total = jnp.zeros((), jnp.float32)
@@ -280,7 +288,8 @@ def _apply_layers(params: Params, cfg: ModelConfig, x, *, positions, enc_out,
                             enc_out=enc_out, cache=centry, pos=pos, mode=mode,
                             compute_dtype=compute_dtype, part=part,
                             active=active, block_tables=block_tables,
-                            slot=slot, n_valid=n_valid)
+                            slot=slot, n_valid=n_valid,
+                            first_new_pos=first_new_pos)
 
     if prefix:
         new_cache["prefix"] = []
@@ -484,26 +493,32 @@ def _decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None,
 
 
 def extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
-                *, block_tables=None):
+                *, block_tables=None, first_new_pos=0):
     """Chunked-prefill step: extend ONE slot of the pooled cache by up to T
     tokens. tokens: (1, T) int32 at absolute positions ``pos..pos+T-1``;
     ``n_valid`` (traced scalar) marks the ragged tail — padded positions
     write nothing and never contaminate valid state (attention is causal,
     recurrences take identity steps past ``n_valid``). ``slot`` (traced
     scalar) selects the slot; ``block_tables`` selects the paged layout.
+    ``first_new_pos`` (traced scalar) is where this request's prefill
+    started: > 0 when a prefix-cache hit mapped positions below it from
+    shared pool blocks, so the first chunk begins mid-sequence and the
+    paged snapshot below ``first_new_pos`` is readable.
 
-    All of pos/n_valid/slot trace as scalars, so ONE compiled shape serves
-    every chunk of every prompt length. Local-only (no partitioner): SPMD
-    serving keeps the whole-prompt prefill path. Returns
-    (logits (1, 1, V) at the last valid position, new_cache).
+    All of pos/n_valid/slot/first_new_pos trace as scalars, so ONE compiled
+    shape serves every chunk of every prompt length, cached prefix or not.
+    Local-only (no partitioner): SPMD serving keeps the whole-prompt
+    prefill path. Returns (logits (1, 1, V) at the last valid position,
+    new_cache).
     """
     with _model_kernel_scope(cfg, None):
         return _extend_step(params, cfg, cache, tokens, pos, n_valid, slot,
-                            block_tables=block_tables)
+                            block_tables=block_tables,
+                            first_new_pos=first_new_pos)
 
 
 def _extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
-                 *, block_tables=None):
+                 *, block_tables=None, first_new_pos=0):
     x = embed_tokens(params, cfg, tokens)
     T = x.shape[1]
     if cfg.learned_pos and "pos_embed" in params:
@@ -513,7 +528,8 @@ def _extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
                                     enc_out=None, cache=cache, pos=pos,
                                     mode="extend", part=None,
                                     block_tables=block_tables, slot=slot,
-                                    n_valid=n_valid)
+                                    n_valid=n_valid,
+                                    first_new_pos=first_new_pos)
     h_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, 1)
     logits = logits_fn(params, cfg, h_last, None)[..., :cfg.vocab_size]
     return logits, new_cache

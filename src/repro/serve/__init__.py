@@ -1,3 +1,5 @@
 from repro.serve.engine import BlockAllocator, Request, Result, ServeEngine
+from repro.serve.prefix import PrefixIndex, page_hashes
 
-__all__ = ["BlockAllocator", "Request", "Result", "ServeEngine"]
+__all__ = ["BlockAllocator", "PrefixIndex", "Request", "Result",
+           "ServeEngine", "page_hashes"]

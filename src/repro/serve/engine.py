@@ -13,6 +13,18 @@ batched KV/recurrent cache. Two cache layouts:
   independent in-flight streams over fixed-size blocks, no per-stream
   worst-case reservation. Blocks free the moment a request finishes.
 
+With ``prefix_cache=True`` (``cfg.prefix_cache``), fully-written prompt
+pages are published into a :class:`repro.serve.prefix.PrefixIndex` (page-
+granular chain hashes); a later request whose prompt shares the prefix maps
+those blocks read-only into its block table (refcount++), skips prefill for
+the matched pages, and chunk-prefills only the tail from ``first_new_pos``.
+Writes to a shared block privatize it first (copy-on-write: fresh block,
+jitted page copy, table remap). Finished requests leave their indexed pages
+resident as refcount-0 *cached* blocks, reclaimed LRU under pool pressure —
+so a hot system prompt's KV survives between requests at zero steady-state
+cost. All-full-attention configs only (ring/recurrent per-slot state cannot
+be restored from the pool); incapable configs serve cold.
+
 Prefill is **chunked**: prompts advance ``prefill_chunk`` tokens per engine
 step through one jitted ``extend_step`` graph (ragged tails ride in the same
 shape behind an ``n_valid`` scalar), interleaved with decode steps for the
@@ -42,9 +54,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import dispatch as kdispatch
 from repro.models import decode_step, extend_step, forward, logits_fn
-from repro.models.cache import default_n_blocks, init_cache, kv_bytes, \
-    n_blocks_for_bytes, pages_per_slot
+from repro.models.cache import copy_block, default_n_blocks, init_cache, \
+    kv_bytes, n_blocks_for_bytes, pages_per_slot
 from repro.quant import is_quant_dtype, quantize_params
+from repro.serve.prefix import PrefixIndex, page_hashes
 
 PyTree = Any
 
@@ -73,22 +86,53 @@ class Result:
 
 
 class BlockAllocator:
-    """Free-list allocator over the global KV block pool.
+    """Refcounted free-list allocator over the global KV block pool.
 
     Block 0 is the *null block*: never handed out, it absorbs the dropped
     writes of inactive slots and ragged prefill tails (their scatter indices
     route out of bounds / to the null entry instead of another stream's
     data — the block-pool equivalent of writing into a scratch bank).
+
+    Every other block is in exactly one of three states:
+
+    * **free** — on the free list, refcount 0;
+    * **live** — refcount >= 1: owned by one slot, or *shared* read-only by
+      several slots through the prefix cache (``incref`` per sharer; a write
+      to a shared block must copy-on-write first);
+    * **cached** — refcount 0 but pinned by the :class:`PrefixIndex`
+      (``evictor``): retained after its last owner finished so future
+      prefix hits can adopt it, evictable LRU under pool pressure.
+
+    ``alloc`` is transactional: if the grant cannot be completed — even
+    after asking the evictor to reclaim cached blocks — every block already
+    popped is rolled back onto the free list before the error propagates,
+    so a partial failure never leaks blocks.
     """
 
     def __init__(self, n_blocks: int, page_size: int):
         self.n_blocks = n_blocks
         self.page_size = page_size
         self._free = list(range(n_blocks - 1, 0, -1))
+        self.ref = np.zeros(n_blocks, np.int32)
+        self.evictor = None      # PrefixIndex (or None): reclaims cached
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        """Distinct blocks with refcount >= 1."""
+        return int((self.ref > 0).sum())
+
+    @property
+    def n_evictable(self) -> int:
+        return 0 if self.evictor is None else self.evictor.n_evictable(self)
+
+    @property
+    def n_available(self) -> int:
+        """Blocks an ``alloc`` could obtain right now (free + evictable)."""
+        return self.n_free + self.n_evictable
 
     @property
     def capacity(self) -> int:
@@ -98,13 +142,69 @@ class BlockAllocator:
         return pages_per_slot(n_tokens, self.page_size)
 
     def alloc(self, n: int) -> list[int]:
-        if n > len(self._free):
-            raise RuntimeError(f"allocator exhausted: want {n}, "
-                               f"free {len(self._free)}")
-        return [self._free.pop() for _ in range(n)]
+        """Grant ``n`` fresh blocks at refcount 1, evicting cached blocks
+        as needed; rolls the partial grant back cleanly on failure."""
+        got: list[int] = []
+        try:
+            for _ in range(n):
+                if not self._free and self.evictor is not None:
+                    self.evictor.evict_one(self)
+                if not self._free:
+                    raise RuntimeError(
+                        f"allocator exhausted: want {n}, free {self.n_free} "
+                        f"(+{self.n_evictable} evictable)")
+                blk = self._free.pop()
+                if self.ref[blk] != 0:      # corrupted free list
+                    self._free.append(blk)
+                    raise RuntimeError(f"free-list block {blk} has "
+                                       f"refcount {int(self.ref[blk])}")
+                self.ref[blk] = 1
+                got.append(blk)
+        except Exception:
+            for blk in reversed(got):
+                self.ref[blk] = 0
+                self._free.append(blk)
+            raise
+        return got
+
+    def incref(self, block: int) -> None:
+        """Adopt a cached block (0 -> 1) or add a sharer to a live one."""
+        if not 0 < block < self.n_blocks:
+            raise ValueError(f"invalid block id {block}")
+        if (self.evictor is not None and self.ref[block] == 0
+                and self.evictor.is_cached(block)):
+            self.evictor.note_adopted(block)     # cached -> live
+        self.ref[block] += 1
+
+    def decref(self, block: int, *, retain: bool = False) -> int:
+        """Drop one reference. At refcount 0 the block returns to the free
+        list unless ``retain`` (the prefix index keeps it cached). Returns
+        the new refcount; a double free raises instead of corrupting."""
+        r = int(self.ref[block]) - 1
+        if r < 0:
+            raise RuntimeError(f"double free of block {block}")
+        self.ref[block] = r
+        if r == 0:
+            if not retain:
+                self._free.append(block)
+            elif self.evictor is not None:
+                self.evictor.note_cached(block)  # live -> cached
+        return r
+
+    def free_block(self, block: int) -> None:
+        """Return an (evicted, refcount-0) block to the free list."""
+        if self.ref[block] != 0:
+            raise RuntimeError(f"freeing live block {block} "
+                               f"(refcount {int(self.ref[block])})")
+        self._free.append(block)
 
     def release(self, blocks: list[int]) -> None:
-        self._free.extend(blocks)
+        """Drop one reference on each block; blocks pinned by the evictor
+        (prefix index) are retained as cached instead of freed."""
+        for blk in blocks:
+            retain = (self.evictor is not None
+                      and self.evictor.is_cached(blk))
+            self.decref(blk, retain=retain)
 
 
 def _sample(logits, temps, key):
@@ -123,7 +223,9 @@ class ServeEngine:
                  paged: bool | None = None, page_size: int | None = None,
                  prefill_chunk: int | None = None,
                  max_blocks: int | None = None,
-                 kv_budget_bytes: int | None = None):
+                 kv_budget_bytes: int | None = None,
+                 prefix_cache: bool | None = None,
+                 prefix_lru: int | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
@@ -131,6 +233,25 @@ class ServeEngine:
         self.paged = cfg.paged_kv if paged is None else paged
         self.page_size = page_size or cfg.page_size
         self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
+        # prefix caching shares fully-written prompt pages of the block pool
+        # across requests (refcounted, copy-on-write). It requires every
+        # cacheable layer state to live in the paged pools, so it is gated
+        # on all-full-attention decoder configs: sliding-window rings and
+        # recurrent carries are per-slot dense state a prefix hit cannot
+        # restore. Incapable configs silently serve cold (prefix_hits == 0)
+        # rather than erroring — the flag is a throughput hint, not a
+        # semantics change.
+        want_prefix = (cfg.prefix_cache if prefix_cache is None
+                       else prefix_cache)
+        self.prefix_capable = (self.paged and part is None
+                               and cfg.encoder is None
+                               and all(sp.mixer == "full"
+                                       for sp in cfg.all_layers()))
+        self.prefix_cache = bool(want_prefix) and self.prefix_capable
+        self.prefix_lru = (cfg.prefix_lru if prefix_lru is None
+                           else prefix_lru)
+        if self.prefix_lru < 0:     # engine kwarg / --prefix-lru bypasses
+            raise ValueError("prefix_lru must be >= 0")
         if self.paged and part is not None:
             raise ValueError("paged serving is local-only: SPMD serving "
                              "keeps the dense layout")
@@ -179,6 +300,12 @@ class ServeEngine:
             # and a pool smaller than the slot count cannot serve anyway
             self.n_blocks = max(n_blocks, max_slots + 1)
             self.allocator = BlockAllocator(self.n_blocks, self.page_size)
+            if self.prefix_cache:
+                self.prefix_index = PrefixIndex(self.page_size,
+                                                max_cached=self.prefix_lru)
+                self.allocator.evictor = self.prefix_index
+            else:
+                self.prefix_index = None
             self.n_pages = pages_per_slot(max_len, self.page_size)
             self.block_tables = np.zeros((max_slots, self.n_pages), np.int32)
             self.cache = init_cache(cfg, max_slots, max_len,
@@ -190,6 +317,7 @@ class ServeEngine:
             self._slot_kv_bytes = (kv_bytes(self.cache) - pool) // max_slots
         else:
             self.allocator = None
+            self.prefix_index = None
             self.n_blocks = 0
             self.block_tables = None
             self.cache = init_cache(cfg, max_slots, max_len)
@@ -203,7 +331,12 @@ class ServeEngine:
         self.slot_temp = np.zeros(max_slots, np.float32)
         self.slot_blocks: list[list[int]] = [[] for _ in range(max_slots)]
         self._prefilling: dict[int, Request] = {}        # slot -> request
+        self._admit_hashes: dict[int, list[int]] = {}    # uid -> page hashes
         self._prefill_off = np.zeros(max_slots, np.int32)
+        #: absolute position of the first non-prefix-cached token per slot —
+        #: chunked prefill starts here; everything below it was mapped
+        #: read-only from shared blocks
+        self._first_new = np.zeros(max_slots, np.int32)
         self._t0 = np.zeros(max_slots, np.float64)
         self.queue: deque[Request] = deque()
         self.results: dict[int, Result] = {}
@@ -211,9 +344,15 @@ class ServeEngine:
         self._decode_fn = jax.jit(self._decode_all, donate_argnums=(1,))
         self._commit_fn = jax.jit(self._commit_slot, donate_argnums=(0,))
         self._chunk_fn = None
+        self._copy_fn = jax.jit(
+            lambda cache, src, dst: copy_block(cache, src, dst,
+                                               self.n_blocks),
+            donate_argnums=(0,))
         self.stats = {"prefills": 0, "decode_steps": 0, "prefill_chunks": 0,
                       "prefill_recompiles": 0, "rejected": 0,
-                      "kv_bytes_alloc": 0}
+                      "kv_bytes_alloc": 0, "kv_bytes_cached": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefix_cow": 0, "prefix_evictions": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -245,11 +384,14 @@ class ServeEngine:
         return _sample(logits[:, 0], temps, key), cache
 
     def _chunk_step(self, params, cache, tokens, pos, n_valid, slot, tables,
-                    temp, key):
+                    temp, key, first_new):
         """One chunked-prefill step for one slot + fused sampling (the
-        sampled id only matters on the final chunk)."""
+        sampled id only matters on the final chunk). ``first_new`` (traced
+        scalar) is the absolute position prefill started at — positions
+        below it come from prefix-shared blocks."""
         logits, cache = extend_step(params, self.cfg, cache, tokens, pos,
-                                    n_valid, slot, block_tables=tables)
+                                    n_valid, slot, block_tables=tables,
+                                    first_new_pos=first_new)
         return _sample(logits[:, 0], temp[None], key), cache
 
     def _commit_slot(self, cache, slot_cache, slot, tables):
@@ -315,7 +457,34 @@ class ServeEngine:
         res = self.results[req.uid]
         res.finish_reason = "rejected"
         res.detail = why
+        self._admit_hashes.pop(req.uid, None)
         self.stats["rejected"] += 1
+
+    def _cow_pages(self, slot: int, lo: int, hi: int) -> None:
+        """Copy-on-write guard before writing positions ``[lo, hi)`` of
+        ``slot``: any touched page whose block is shared (refcount > 1) or
+        pinned by the prefix index gets a private copy first (fresh block,
+        jitted page copy, table remap). Admission already privatizes the one
+        boundary page a prefix hit can write, so this keeps 'writers never
+        touch shared blocks' true by construction rather than by scheduling
+        luck."""
+        if not self.paged or self.prefix_index is None or hi <= lo:
+            return
+        page = self.page_size
+        for p in range(lo // page, (hi - 1) // page + 1):
+            blk = int(self.block_tables[slot, p])
+            if blk == 0:
+                continue
+            if (self.allocator.ref[blk] > 1
+                    or self.prefix_index.is_cached(blk)):
+                [dst] = self.allocator.alloc(1)
+                self.cache = self._copy_fn(self.cache, np.int32(blk),
+                                           np.int32(dst))
+                self.allocator.release([blk])
+                self.slot_blocks[slot][
+                    self.slot_blocks[slot].index(blk)] = dst
+                self.block_tables[slot, p] = dst
+                self.stats["prefix_cow"] += 1
 
     def _admit(self):
         """Fill free slots from the queue (FCFS). Paged admission is gated
@@ -343,28 +512,80 @@ class ServeEngine:
                                       "requests only (no frames/embeds)")
                     continue
                 if self.paged:
-                    need = self.allocator.pages_for(n_tokens)
-                    if need > self.allocator.capacity:
+                    total = self.allocator.pages_for(n_tokens)
+                    if total > self.allocator.capacity:
                         cap = self.allocator.capacity
                         self.queue.popleft()
                         self._reject(
                             req,
-                            f"exceeds block pool: needs {need} blocks "
-                            f"({need * self._block_kv_bytes} KV bytes) > "
+                            f"exceeds block pool: needs {total} blocks "
+                            f"({total * self._block_kv_bytes} KV bytes) > "
                             f"capacity {cap} blocks "
                             f"({cap * self._block_kv_bytes} KV bytes)")
                         continue
-                    if need > self.allocator.n_free:
+                    # prefix cache: map the longest indexed chain of this
+                    # prompt's pages read-only into the slot's block table
+                    # (refcount++ per page) and prefill only the tail
+                    matched: list[int] = []
+                    first_new = 0
+                    if self.prefix_cache and not legacy:
+                        # hash once per request: a head-of-queue request
+                        # stalled on free blocks retries every step and
+                        # must not re-hash its whole prompt each time
+                        hs = self._admit_hashes.get(req.uid)
+                        if hs is None:
+                            hs = page_hashes(req.prompt, self.page_size)
+                            self._admit_hashes[req.uid] = hs
+                        matched = self.prefix_index.lookup(
+                            req.prompt, self.allocator, hashes=hs)
+                        # clamp below by 0: an empty prompt must not push
+                        # the prefill offset negative
+                        first_new = max(0, min(len(matched) * self.page_size,
+                                               len(req.prompt) - 1))
+                    # a page-aligned full-prompt match still recomputes the
+                    # final token (its logits seed decode), so the last
+                    # matched page gets written mid-page -> privatize it
+                    # now via copy-on-write (counted into the grant, so the
+                    # pool can never strand a request mid-COW)
+                    cow = (bool(matched)
+                           and first_new < len(matched) * self.page_size)
+                    need = total - len(matched) + (1 if cow else 0)
+                    if need > self.allocator.n_available:
+                        # hand the prefix references back (refcount-0
+                        # indexed blocks return to cached, not freed)
+                        self.allocator.release(matched)
                         return                    # wait for blocks to free
-                    blocks = self.allocator.alloc(need)
+                    try:
+                        fresh = self.allocator.alloc(need)
+                    except RuntimeError:
+                        # alloc rolled its partial grant back; hand the
+                        # prefix references back too and wait — admission
+                        # leaves no trace of the failed attempt
+                        self.allocator.release(matched)
+                        return
+                    if cow:
+                        shared = matched[-1]
+                        matched[-1] = fresh.pop(0)
+                        self.cache = self._copy_fn(
+                            self.cache, np.int32(shared),
+                            np.int32(matched[-1]))
+                        self.allocator.release([shared])
+                        self.stats["prefix_cow"] += 1
+                    blocks = matched + fresh
                     self.slot_blocks[slot] = blocks
                     self.block_tables[slot, :] = 0
-                    self.block_tables[slot, :need] = blocks
+                    self.block_tables[slot, :len(blocks)] = blocks
+                    self._first_new[slot] = first_new
                     self.stats["kv_bytes_alloc"] += (
                         need * self._block_kv_bytes + self._slot_kv_bytes)
+                    if matched:
+                        self.stats["prefix_hits"] += 1
+                        self.stats["prefix_hit_tokens"] += first_new
                 else:
+                    self._first_new[slot] = 0
                     self.stats["kv_bytes_alloc"] += self._slot_kv_bytes
                 self.queue.popleft()
+                self._admit_hashes.pop(req.uid, None)
                 self._t0[slot] = time.perf_counter()
                 self.slot_uid[slot] = req.uid
                 self.slot_temp[slot] = req.temperature
@@ -375,7 +596,9 @@ class ServeEngine:
                 else:
                     self.phase[slot] = PREFILL
                     self._prefilling[slot] = req
-                    self._prefill_off[slot] = 0
+                    # chunked prefill starts at the first non-cached token:
+                    # everything below rode in read-only through the table
+                    self._prefill_off[slot] = self._first_new[slot]
 
     def _prefill_whole(self, slot: int, req: Request):
         prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
@@ -411,17 +634,29 @@ class ServeEngine:
             buf[0, :t] = prompt[off:off + t]
             self.rng, k = jax.random.split(self.rng)
             fn = self._ensure_chunk_fn()
+            self._cow_pages(slot, off, off + t)
             with self._kernel_scope():
                 tok, self.cache = fn(self.params, self.cache,
                                      jnp.asarray(buf), np.int32(off),
                                      np.int32(t), np.int32(slot),
                                      self._tables(),
-                                     np.float32(req.temperature), k)
+                                     np.float32(req.temperature), k,
+                                     np.int32(self._first_new[slot]))
             self.stats["prefill_chunks"] += 1
             off += t
             self._prefill_off[slot] = off
             if off >= len(prompt):
                 del self._prefilling[slot]
+                if self.prefix_index is not None:
+                    # every full prompt page is now written: publish the
+                    # slot's pages so later identical prefixes can share
+                    # them (matched pages re-register as a no-op; cold
+                    # concurrent duplicates stay un-indexed and free
+                    # normally at finish)
+                    n_full = len(prompt) // self.page_size
+                    if n_full:
+                        self.prefix_index.publish(
+                            prompt, self.slot_blocks[slot][:n_full])
                 self.phase[slot] = DECODE
                 self._finish_prefill(slot, int(tok[0]), len(prompt))
 
@@ -442,8 +677,13 @@ class ServeEngine:
         self.phase[slot] = FREE
         self.slot_uid[slot] = -1
         if self.paged and self.slot_blocks[slot]:
-            # free blocks immediately: they are admittable this very step
+            # drop this slot's references immediately: unshared blocks are
+            # admittable this very step, and fully-written prompt pages
+            # that made it into the prefix index stay resident as cached
+            # (refcount-0, LRU-evictable) blocks instead of freeing
             self.allocator.release(self.slot_blocks[slot])
+            if self.prefix_index is not None:
+                self.prefix_index.trim(self.allocator)
             self.slot_blocks[slot] = []
             self.block_tables[slot, :] = 0
 
@@ -455,6 +695,9 @@ class ServeEngine:
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for slot in np.nonzero(dec)[0]:
             tokens[slot, 0] = self.results[self.slot_uid[slot]].tokens[-1]
+            # a decode write to a prefix-shared page privatizes it first
+            self._cow_pages(slot, int(self.slot_pos[slot]),
+                            int(self.slot_pos[slot]) + 1)
         self.rng, k = jax.random.split(self.rng)
         with self._kernel_scope():
             ids, self.cache = self._decode_fn(
@@ -480,6 +723,15 @@ class ServeEngine:
         self._admit()
         self._prefill_chunks()
         self._decode()
+        if self.prefix_index is not None:
+            self.stats["prefix_evictions"] = \
+                self.prefix_index.stats["evictions"]
+            # cached-block accounting: KV bytes held by refcount-0 pages
+            # retained for future prefix hits (reclaimable, so they are
+            # reported separately from kv_bytes_alloc)
+            self.stats["kv_bytes_cached"] = (
+                self.prefix_index.n_evictable(self.allocator)
+                * self._block_kv_bytes)
         return int((self.phase != FREE).sum())
 
     def run(self, requests: list[Request], *, max_steps: int = 100000

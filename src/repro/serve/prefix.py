@@ -1,0 +1,200 @@
+"""Radix prefix index for paged-KV prefix caching.
+
+Real serving traffic is dominated by repeated prompt prefixes (shared system
+prompts, multi-turn histories). This module maps *page-granular chain
+hashes* of prompt tokens to KV pool blocks so a new request can share the
+blocks a finished (or still-running) request already filled, instead of
+recomputing and re-storing identical KV rows — the serving analogue of the
+Occamy roadmap's amortize-the-shared-structure theme.
+
+The index is radix-shaped without storing a tree: page ``i``'s hash chains
+over page ``i-1``'s hash plus page ``i``'s tokens, so walking pages
+left-to-right until the first miss *is* the radix descent, and two prompts
+share an entry exactly when they share the whole token prefix up to that
+page boundary.
+
+Block lifetime is coordinated with :class:`repro.serve.engine.BlockAllocator`
+refcounts:
+
+* a **live** indexed block (refcount >= 1) is pinned — eviction never
+  touches it;
+* a **cached** indexed block (refcount 0) stays resident after its last
+  owner finished, and is evictable LRU (lookup hits refresh recency) when
+  the allocator runs out of free blocks or the ``max_cached`` cap
+  (``--prefix-lru``) is exceeded;
+* an indexed block is never on the free list.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+#: hash-chain seed; any fixed int works (the index is engine-local).
+_SEED = 0x9E3779B9
+
+
+def page_hashes(tokens, page_size: int) -> list[int]:
+    """Chain hashes of the *full* ``page_size``-token pages of ``tokens``.
+
+    ``h[i] = hash((h[i-1], tokens[i*page : (i+1)*page]))`` — equal hashes
+    imply equal whole-prefix token chains (up to Python-hash collisions,
+    which page-chaining makes astronomically unlikely within one process).
+    A trailing partial page is never hashed: only fully-written pages are
+    shareable.
+    """
+    toks = np.asarray(tokens)
+    h = _SEED ^ page_size
+    out = []
+    for i in range(len(toks) // page_size):
+        page = tuple(int(t) for t in toks[i * page_size:(i + 1) * page_size])
+        h = hash((h,) + page)
+        out.append(h)
+    return out
+
+
+class PrefixIndex:
+    """LRU radix index: page chain hash -> pool block id.
+
+    ``max_cached`` bounds how many refcount-0 blocks the index may retain
+    (0 = unbounded, i.e. bounded only by pool pressure via
+    :meth:`evict_one`). The index never owns block storage — it only pins
+    ids; all refcounting goes through the allocator passed into each call.
+    """
+
+    def __init__(self, page_size: int, max_cached: int = 0):
+        self.page_size = page_size
+        self.max_cached = max_cached
+        self._h2b: OrderedDict[int, int] = OrderedDict()  # MRU at the end
+        self._b2h: dict[int, int] = {}
+        self._parent: dict[int, int | None] = {}   # chain links (radix edges)
+        self._nchild: dict[int, int] = {}
+        self._n_cached = 0                         # refcount-0 indexed blocks
+        self.stats = {"hits": 0, "hit_tokens": 0, "misses": 0,
+                      "published": 0, "evictions": 0}
+
+    def __len__(self) -> int:
+        return len(self._h2b)
+
+    def is_cached(self, block: int) -> bool:
+        """True if ``block`` is pinned by the index (live or refcount-0)."""
+        return block in self._b2h
+
+    @property
+    def blocks(self) -> set[int]:
+        return set(self._b2h)
+
+    # ------------------------------------------------------------------
+    def lookup(self, tokens, alloc, *, hashes=None) -> list[int]:
+        """Longest indexed chain of full prompt pages, in page order.
+
+        Every matched block is incref'd through ``alloc`` (adopting
+        refcount-0 cached blocks back to live) and LRU-refreshed. The
+        caller owns the returned references — on admission failure it must
+        hand them back via the engine's decref path. ``hashes`` short-
+        circuits the token hashing (the engine precomputes them once per
+        request, so a head-of-queue request stalled on free blocks does not
+        re-hash its whole prompt every engine step).
+        """
+        blocks = []
+        for h in (page_hashes(tokens, self.page_size) if hashes is None
+                  else hashes):
+            blk = self._h2b.get(h)
+            if blk is None:
+                break
+            self._h2b.move_to_end(h)
+            alloc.incref(blk)
+            blocks.append(blk)
+        if blocks:
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += len(blocks) * self.page_size
+        else:
+            self.stats["misses"] += 1
+        return blocks
+
+    def publish(self, tokens, blocks) -> int:
+        """Register a request's fully-written prompt pages (hash -> block).
+
+        ``blocks`` are the slot's pool blocks for the prompt's full pages,
+        in page order. Pages whose hash is already indexed are skipped —
+        blocks a request *matched* from the index re-register under their
+        existing entry, and concurrent cold duplicates stay un-indexed (they
+        free normally at finish). Returns the number of new entries.
+        """
+        n = 0
+        prev = None
+        for h, blk in zip(page_hashes(tokens, self.page_size), blocks):
+            if h in self._h2b or blk in self._b2h:
+                prev = h if h in self._h2b else None
+                continue
+            self._h2b[h] = blk
+            self._b2h[blk] = h
+            parent = prev if prev in self._h2b else None
+            self._parent[h] = parent
+            if parent is not None:
+                self._nchild[parent] = self._nchild.get(parent, 0) + 1
+            prev = h
+            n += 1
+        self.stats["published"] += n
+        return n
+
+    # ------------------------------------------------------------------
+    # cached-block accounting: the allocator notifies on every live<->cached
+    # transition, so n_evictable is O(1) instead of an O(index) scan per
+    # engine step
+    def note_cached(self, block: int) -> None:
+        """An indexed block's refcount just hit 0 (retained, not freed)."""
+        if block not in self._b2h:
+            raise RuntimeError(f"retain of unindexed block {block} "
+                               "would leak it")
+        self._n_cached += 1
+
+    def note_adopted(self, block: int) -> None:
+        """A refcount-0 cached block just went live again (prefix hit)."""
+        self._n_cached -= 1
+
+    def n_evictable(self, alloc) -> int:
+        """Refcount-0 cached blocks the index could hand back to the pool."""
+        return self._n_cached
+
+    def evict_one(self, alloc) -> bool:
+        """Drop one least-recently-used refcount-0 cached block back to the
+        allocator's free list. Live (refcount > 0) entries are never
+        evicted. Returns False when nothing is evictable.
+
+        Victims are chosen *childless-first* (radix leaves): evicting a
+        chain's head before its tail would leave the suffix entries
+        unreachable — lookup walks from page 0, so a missing head makes
+        every descendant dead weight still occupying pool blocks. Only when
+        every refcount-0 entry has children does the LRU head get evicted
+        anyway (reclaiming a block beats stranding admission)."""
+        victim = fallback = None
+        for h, blk in self._h2b.items():          # oldest first
+            if alloc.ref[blk] != 0:
+                continue
+            if not self._nchild.get(h, 0):
+                victim = (h, blk)
+                break
+            if fallback is None:
+                fallback = (h, blk)
+        victim = victim or fallback
+        if victim is None:
+            return False
+        h, blk = victim
+        del self._h2b[h]
+        del self._b2h[blk]
+        self._nchild.pop(h, None)
+        parent = self._parent.pop(h, None)
+        if parent is not None and parent in self._nchild:
+            self._nchild[parent] -= 1
+        self._n_cached -= 1
+        alloc.free_block(blk)
+        self.stats["evictions"] += 1
+        return True
+
+    def trim(self, alloc) -> None:
+        """Enforce the ``max_cached`` cap on refcount-0 retained blocks."""
+        if not self.max_cached:
+            return
+        while self._n_cached > self.max_cached and self.evict_one(alloc):
+            pass

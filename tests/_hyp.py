@@ -1,13 +1,37 @@
 """Hypothesis shim: the real library when installed, a skip-only fallback
 otherwise (minimal containers ship without a hypothesis wheel; property tests
-skip rather than killing collection for the whole suite)."""
+skip rather than killing collection for the whole suite).
+
+With the real library, two settings profiles are registered:
+
+* ``ci`` — fixed-seed/deterministic (``derandomize=True``), fewer examples:
+  the profile the CI ``pytest -m property`` step runs, so a red property
+  job is reproducible rather than a roll of the dice;
+* ``dev`` — more examples, randomized: what local runs get.
+
+Select explicitly with ``HYPOTHESIS_PROFILE=ci|dev``; otherwise ``ci`` is
+auto-picked when the ``CI`` env var is set. Tests that pass their own
+``@settings(...)`` keep those values (profiles only fill the defaults).
+"""
 from __future__ import annotations
 
+import os
+
 try:
-    from hypothesis import given, settings
+    from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile(
+        "ci", max_examples=25, derandomize=True, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("dev", max_examples=75, deadline=None)
+    settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
 except ImportError:  # pragma: no cover - exercised only without hypothesis
     import pytest
+
+    HAVE_HYPOTHESIS = False
 
     def settings(*_a, **_k):
         return lambda f: f
@@ -27,4 +51,4 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
 
     st = _Strategies()
 
-__all__ = ["given", "settings", "st"]
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

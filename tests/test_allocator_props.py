@@ -1,0 +1,244 @@
+"""Property-based invariants of the refcounted COW block allocator + prefix
+index — random alloc/share/adopt/release/publish/evict/trim action sequences
+checked against a pure-Python oracle after every step.
+
+Refcounted allocators are exactly the kind of code unit tests under-cover:
+the bugs live in *interleavings* (release-then-evict, adopt-then-rollback),
+not in single calls. The invariants:
+
+* **refcount conservation** — ``allocator.ref[b]`` equals the number of
+  outstanding references the driver holds on ``b``;
+* **partition** — free list, live blocks (ref > 0), and cached blocks
+  (indexed, ref 0) are pairwise disjoint and together cover the capacity;
+* **block 0 never allocated** — the null block stays out of every state;
+* **LRU never evicts a live block** — eviction only returns ref-0 blocks;
+* **no double free** — over-release raises instead of corrupting;
+* **transactional alloc** — a failed grant (even one that partially popped
+  the free list and evicted cached blocks) leaves refcounts and free-list
+  membership exactly as before.
+
+Driven twice: via hypothesis (shrinkable random programs, ``-m property``)
+and via fixed numpy seeds so the suite still exercises the invariants on
+containers without a hypothesis wheel.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from tests._hyp import given, settings, st
+
+from repro.serve import BlockAllocator, PrefixIndex
+
+PAGE = 4
+N_BLOCKS = 9          # 8 usable + null block
+
+
+def _mk():
+    alloc = BlockAllocator(N_BLOCKS, PAGE)
+    index = PrefixIndex(PAGE)
+    alloc.evictor = index
+    return alloc, index
+
+
+def _tokens(tag: int) -> np.ndarray:
+    """One unique full page of tokens per tag (unique chain hash)."""
+    return np.full(PAGE, tag, np.int32)
+
+
+def _check_invariants(alloc: BlockAllocator, index: PrefixIndex,
+                      owners: list[int]) -> None:
+    free = set(alloc._free)
+    live = {b for b in range(alloc.n_blocks) if alloc.ref[b] > 0}
+    cached = {b for b in index.blocks if alloc.ref[b] == 0}
+    # block 0 never allocated, never free-listed, never cached
+    assert 0 not in free and 0 not in live and 0 not in cached
+    assert alloc.ref[0] == 0
+    # refcount conservation against the driver's outstanding references
+    for b in range(1, alloc.n_blocks):
+        assert alloc.ref[b] == owners.count(b), f"block {b}"
+    assert (alloc.ref >= 0).all()
+    # free / live / cached partition the capacity
+    assert not (free & live), "free list intersects live blocks"
+    assert not (free & cached), "free list intersects cached blocks"
+    assert len(free) == alloc.n_free, "free list holds duplicates"
+    assert len(free) + len(live) + len(cached) == alloc.capacity, \
+        "blocks leaked or double-counted"
+    # every indexed block is live or cached, never free
+    assert index.blocks <= (live | cached)
+    # the O(1) cached-block counter agrees with a ground-truth scan
+    assert index.n_evictable(alloc) == len(cached), \
+        "incremental cached-block counter drifted"
+
+
+def _run_program(program: list[tuple[int, int]]) -> None:
+    """Interpret (op, arg) pairs as allocator/index actions; check the
+    invariants after every action. Infeasible actions (nothing live to
+    share, nothing cached to evict, ...) degrade to no-ops, so any integer
+    program is a valid schedule."""
+    alloc, index = _mk()
+    owners: list[int] = []      # one entry per reference the driver holds
+    published: list[np.ndarray] = []
+    tag = 0
+    for op, arg in program:
+        op = op % 7
+        if op == 0:                                   # alloc 1..3 blocks
+            n = arg % 3 + 1
+            before = (list(alloc._free), alloc.ref.copy())
+            if n <= alloc.n_available:
+                owners.extend(alloc.alloc(n))
+            else:
+                with pytest.raises(RuntimeError):
+                    alloc.alloc(n)
+                # transactional: the failed grant rolled everything back
+                # (eviction may legitimately have moved cached -> free)
+                assert alloc.ref.tolist() == before[1].tolist()
+                assert set(alloc._free) >= set(before[0])
+        elif op == 1:                                 # share a live block
+            live = sorted({b for b in owners})
+            if live:
+                blk = live[arg % len(live)]
+                alloc.incref(blk)
+                owners.append(blk)
+        elif op == 2:                                 # adopt a cached block
+            cached = sorted(b for b in index.blocks if alloc.ref[b] == 0)
+            if cached:
+                blk = cached[arg % len(cached)]
+                alloc.incref(blk)
+                owners.append(blk)
+        elif op == 3:                                 # release one reference
+            if owners:
+                blk = owners.pop(arg % len(owners))
+                alloc.decref(blk, retain=index.is_cached(blk))
+            else:
+                with pytest.raises(RuntimeError):     # double free guarded
+                    alloc.decref(1)
+        elif op == 4:                                 # publish a live block
+            live = sorted({b for b in owners if not index.is_cached(b)})
+            if live:
+                toks = _tokens(tag)
+                tag += 1
+                index.publish(toks, [live[arg % len(live)]])
+                published.append(toks)
+        elif op == 5:                                 # LRU evict one
+            n_cached = index.n_evictable(alloc)
+            evicted = index.evict_one(alloc)
+            assert evicted == (n_cached > 0), \
+                "evict_one must succeed iff a refcount-0 cached block exists"
+        elif op == 6:                                 # lookup a published page
+            if published:
+                hits = index.lookup(published[arg % len(published)], alloc)
+                owners.extend(hits)       # lookup hands back references
+        _check_invariants(alloc, index, owners)
+    # drain: releasing every outstanding reference must account for every
+    # block as free or cached — nothing leaks
+    for blk in owners:
+        alloc.decref(blk, retain=index.is_cached(blk))
+    _check_invariants(alloc, index, [])
+    assert alloc.n_free + index.n_evictable(alloc) == alloc.capacity
+
+
+@pytest.mark.property
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 63)),
+                max_size=80))
+def test_allocator_invariants_random_programs(program):
+    _run_program(program)
+
+
+@pytest.mark.property
+@pytest.mark.parametrize("seed", range(12))
+def test_allocator_invariants_seeded(seed):
+    """Seeded fallback of the same driver: keeps the invariant suite alive
+    on containers without hypothesis (where @given-tests skip)."""
+    rng = np.random.default_rng(seed)
+    program = [(int(a), int(b))
+               for a, b in zip(rng.integers(0, 7, 120),
+                               rng.integers(0, 64, 120))]
+    _run_program(program)
+
+
+# --------------------------------------------------------------------------
+# regression: transactional alloc (the partial-failure leak)
+# --------------------------------------------------------------------------
+def test_alloc_partial_failure_rolls_back():
+    """alloc(n) that pops part of the free list (and evicts cached blocks)
+    before discovering it cannot complete must hand everything back: the
+    admission path sizes grants from prompt+budget *before* cached-block
+    reservations shrink the free list, so the allocator — not the caller —
+    owns making that race leak-free."""
+    alloc, index = _mk()
+    held = alloc.alloc(5)                  # 3 left free
+    toks = _tokens(0)
+    index.publish(toks, [held[0]])
+    blk = held[0]
+    alloc.decref(blk, retain=True)         # -> cached (evictable), 3 free
+    held = held[1:]
+    free_before = set(alloc._free)
+    ref_before = alloc.ref.copy()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(6)                     # 3 free + 1 evictable < 6
+    # the partial grant (and nothing else) was rolled back: refcounts are
+    # untouched and every popped block is free again (the evicted cached
+    # block legitimately moved cached -> free; eviction is not undone)
+    assert alloc.ref.tolist() == ref_before.tolist()
+    assert set(alloc._free) == free_before | {blk}
+    assert not index.is_cached(blk)
+    assert alloc.n_free + alloc.n_evictable + len(held) == alloc.capacity
+    # and the allocator still serves a feasible grant afterwards
+    more = alloc.alloc(4)
+    assert len(set(more)) == 4 and 0 not in more
+
+
+def test_eviction_prefers_chain_tails():
+    """Within one prefix chain the head page is always LRU-older than its
+    suffix, but evicting it first would make every surviving suffix entry
+    unreachable (lookup walks from page 0). Eviction must take childless
+    (radix-leaf) entries first so the remaining cache stays matchable."""
+    alloc, index = _mk()
+    blocks = alloc.alloc(3)
+    chain = np.concatenate([_tokens(0), _tokens(1), _tokens(2)])
+    index.publish(chain, blocks)
+    for b in blocks:
+        alloc.decref(b, retain=True)
+    assert index.evict_one(alloc)
+    # pages 0 and 1 must survive (still a matchable 2-page prefix)
+    assert index.lookup(chain, alloc) == blocks[:2]
+    for b in blocks[:2]:
+        alloc.decref(b, retain=True)
+    assert index.evict_one(alloc)
+    assert index.lookup(chain, alloc) == blocks[:1]
+    alloc.decref(blocks[0], retain=True)
+    assert index.evict_one(alloc)
+    assert index.lookup(chain, alloc) == []
+    assert alloc.n_free == alloc.capacity
+
+
+def test_double_free_raises():
+    alloc, _ = _mk()
+    [blk] = alloc.alloc(1)
+    assert alloc.decref(blk) == 0
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.decref(blk)
+
+
+def test_lru_eviction_order_and_liveness():
+    """Eviction order is least-recently-used (lookup refreshes recency) and
+    live blocks are never victims."""
+    alloc, index = _mk()
+    blocks = alloc.alloc(3)
+    toks = [_tokens(i) for i in range(3)]
+    for t, b in zip(toks, blocks):
+        index.publish(t, [b])
+    # blocks 0,1 go cached; block 2 stays live
+    alloc.decref(blocks[0], retain=True)
+    alloc.decref(blocks[1], retain=True)
+    index.lookup(toks[0], alloc)           # refresh 0 -> MRU, and re-adopt
+    alloc.decref(blocks[0], retain=True)   # hand the reference back
+    assert index.evict_one(alloc)
+    assert not index.is_cached(blocks[1]), "LRU victim should be block 1"
+    assert index.is_cached(blocks[0]) and index.is_cached(blocks[2])
+    assert index.evict_one(alloc)
+    assert not index.is_cached(blocks[0])
+    # only the live block remains indexed: nothing left to evict
+    assert not index.evict_one(alloc)
+    assert index.is_cached(blocks[2])

@@ -378,6 +378,79 @@ def test_kv_dtype_requires_paged_and_no_encdec():
     assert "chunked-prefill" in res.detail
 
 
+@pytest.mark.parametrize("kv", ["int8", "fp8"])
+def test_prefix_shared_quantized_blocks_roundtrip(kv):
+    """Prefix-cache block sharing over quantized pools: the per-row scale
+    tensors ride along on share and copy-on-write, so a warm cache (hits +
+    a full-match COW) emits exactly the tokens the cold quantized engine
+    does — a dropped scale would skew every dequantized prefix row."""
+    cfg = _cfg(kv_dtype=kv)
+    params = init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(60)
+    sys_prompt = rng.integers(0, 256, 16).astype(np.int32)   # 2 full pages
+    reqs = lambda: ([Request(uid=0, prompt=sys_prompt.copy(),  # full match
+                             max_new_tokens=4)]
+                    + [Request(uid=i, prompt=np.concatenate(
+                           [sys_prompt,
+                            rng2.integers(0, 256, 5).astype(np.int32)]),
+                           max_new_tokens=4)
+                       for i, rng2 in
+                       enumerate(np.random.default_rng(61).spawn(2), 1)])
+    outs = {}
+    for pc in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=2, max_len=64,
+                             paged=True, page_size=8, prefill_chunk=8,
+                             prefix_cache=pc)
+        engine.run([Request(uid=99, prompt=sys_prompt, max_new_tokens=2)])
+        res = engine.run(reqs())
+        outs[pc] = [r.tokens for r in res]
+        if pc:
+            assert engine.stats["prefix_hits"] == 3
+            assert engine.stats["prefix_cow"] == 1   # the full-match resubmit
+            assert engine.allocator.n_live == 0
+    assert outs[True] == outs[False], \
+        f"{kv} scales did not survive share/COW"
+
+
+def test_copy_block_carries_quant_scales():
+    """cache.copy_block duplicates K/V *and* the per-row scale leaves of a
+    quantized pool (and leaves non-pool state untouched)."""
+    from repro.models.cache import copy_block
+
+    cfg = _cfg(kv_dtype="int8")
+    cache = init_cache(cfg, 2, 32, n_blocks=6, page_size=8)
+
+    def fill(leaf):
+        if leaf.dtype == jnp.int8:
+            return jnp.arange(leaf.size, dtype=jnp.int32).reshape(
+                leaf.shape).astype(jnp.int8)
+        return jnp.arange(leaf.size, dtype=jnp.float32).reshape(
+            leaf.shape).astype(leaf.dtype)
+
+    cache = jax.tree.map(fill, cache)
+    out = copy_block(cache, 2, 4, 6)
+
+    def check(path, a, b):
+        keys = [getattr(k, "key", None) for k in path]
+        axis = 1 if "blocks" in keys else 0
+        if "self" in keys and a.shape[axis] == 6:
+            src = jnp.take(a, 2, axis)
+            dst = jnp.take(b, 4, axis)
+            np.testing.assert_array_equal(np.asarray(src), np.asarray(dst))
+            # untouched blocks keep their contents
+            np.testing.assert_array_equal(np.asarray(jnp.take(a, 1, axis)),
+                                          np.asarray(jnp.take(b, 1, axis)))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    jax.tree_util.tree_map_with_path(check, cache, out)
+    # the quantized pool really has scale leaves, and they were copied
+    leaves = jax.tree_util.tree_flatten_with_path(out)[0]
+    scale_leaves = [l for p, l in leaves
+                    if any(getattr(k, "key", None) == "k_scale" for k in p)]
+    assert scale_leaves, "quantized pool must carry k_scale leaves"
+
+
 def test_rejection_detail_reports_budget():
     cfg = _cfg()
     params = init(jax.random.PRNGKey(0), cfg)

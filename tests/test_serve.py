@@ -1,11 +1,13 @@
 """Serving engine: continuous batching == sequential decode; slot lifecycle;
-paged (block-pool) vs dense cache parity; chunked prefill; block accounting."""
+paged (block-pool) vs dense cache parity; chunked prefill; block accounting;
+prefix-cache sharing (refcounted COW blocks) with stateful fuzz coverage."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from tests._hyp import given, settings, st
 
 from repro.configs import LayerSpec, get_arch, reduced
 from repro.models import decode_step, forward, init, logits_fn
@@ -216,6 +218,224 @@ def test_block_pool_backpressure():
     results = engine.run(reqs)
     assert [r.finish_reason for r in results[:6]] == ["length"] * 6
     assert results[6].finish_reason == "rejected"
+    assert engine.allocator.n_free == engine.allocator.capacity
+
+
+# --------------------------------------------------------------------------
+# prefix caching (refcounted copy-on-write block sharing)
+# --------------------------------------------------------------------------
+def _shared_prefix_requests(cfg, n, seed, sys_len=16, page=8):
+    """Mixed trace: most prompts extend a shared system prefix (full- or
+    half-page matches), the rest are cold; lengths and budgets vary."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        r = rng.random()
+        if r < 0.5:      # shared prefix + unique tail
+            tail = rng.integers(0, cfg.vocab_size, rng.integers(1, 9))
+            prompt = np.concatenate([sys_prompt, tail.astype(np.int32)])
+        elif r < 0.7:    # exact resubmission (page-aligned full match: COW)
+            prompt = sys_prompt.copy()
+        else:            # cold prompt
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  rng.integers(3, 20)).astype(np.int32)
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(2, 7))))
+    return reqs
+
+
+def _run_interleaved(cfg, params, reqs, submit_at, *, prefix_cache, **kw):
+    """Drive the engine with requests arriving at randomized step offsets
+    (admit/decode/finish interleavings differ per schedule)."""
+    engine = ServeEngine(cfg, params, paged=True, prefix_cache=prefix_cache,
+                         **kw)
+    order = sorted(range(len(reqs)), key=lambda i: submit_at[i])
+    i, step = 0, 0
+    while i < len(order) or engine.queue or engine.active.any():
+        while i < len(order) and submit_at[order[i]] <= step:
+            engine.submit(reqs[order[i]])
+            i += 1
+        engine.step()
+        step += 1
+        assert step < 5000, "engine failed to drain"
+    return engine
+
+
+def _assert_drained_leak_free(engine):
+    """After drain: no live blocks, and free + cached cover the capacity."""
+    alloc = engine.allocator
+    assert alloc.n_live == 0
+    cached = (0 if engine.prefix_index is None
+              else engine.prefix_index.n_evictable(alloc))
+    assert alloc.n_free + cached == alloc.capacity, \
+        (alloc.n_free, cached, alloc.capacity)
+
+
+def _fuzz_once(make_cfg, seed, max_blocks=None):
+    cfg = make_cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    reqs = _shared_prefix_requests(cfg, 7, seed)
+    submit_at = rng.integers(0, 25, len(reqs))
+    outs = {}
+    for pc in (False, True):
+        engine = _run_interleaved(
+            cfg, params,
+            [Request(uid=r.uid, prompt=r.prompt,
+                     max_new_tokens=r.max_new_tokens) for r in reqs],
+            submit_at, prefix_cache=pc, max_slots=3, max_len=64,
+            page_size=8, prefill_chunk=6, max_blocks=max_blocks)
+        outs[pc] = [engine.results[r.uid].tokens for r in reqs]
+        assert all(engine.results[r.uid].finish_reason == "length"
+                   for r in reqs)
+        _assert_drained_leak_free(engine)
+    assert outs[True] == outs[False], \
+        "prefix cache changed greedy outputs"
+
+
+@pytest.mark.property
+@pytest.mark.parametrize("make_cfg", [_cfg, _local_cfg],
+                         ids=["global", "local-window"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_prefix_cache_fuzz_seeded(make_cfg, seed):
+    """Stateful serving fuzz: randomized admit/decode/finish interleavings
+    with the prefix cache on vs off emit identical greedy tokens and leak
+    no blocks, on all-full and local-window paged configs (the latter is
+    prefix-incapable and must degrade to cold serving, not corrupt)."""
+    _fuzz_once(make_cfg, seed)
+
+
+@pytest.mark.property
+@settings(max_examples=5, deadline=None)
+@given(st.integers(100, 10_000))
+def test_prefix_cache_fuzz_hypothesis(seed):
+    """Hypothesis-driven schedules over the all-full config, including a
+    pool small enough (max_blocks=13) that admission backpressure and LRU
+    eviction of cached blocks interleave with the hits."""
+    _fuzz_once(_cfg, seed, max_blocks=13)
+
+
+def test_prefix_hit_skips_prefill_and_shares_blocks(setup):
+    """A warm cache turns the shared-prefix prefill into a tail-only
+    extend: fewer chunks, fewer fresh KV bytes, identical greedy tokens."""
+    cfg, params = setup
+    rng = np.random.default_rng(21)
+    sys_prompt = rng.integers(0, 256, 24).astype(np.int32)   # 3 pages
+    mk = lambda: [Request(uid=i, prompt=np.concatenate(
+                      [sys_prompt, rng2.integers(0, 256, 5).astype(np.int32)]),
+                      max_new_tokens=4)
+                  for i, rng2 in enumerate(np.random.default_rng(22).spawn(4))]
+    stats = {}
+    outs = {}
+    for pc in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=2, max_len=64,
+                             paged=True, page_size=8, prefill_chunk=8,
+                             prefix_cache=pc)
+        [w] = engine.run([Request(uid=99, prompt=sys_prompt,
+                                  max_new_tokens=2)])   # warms the cache
+        kv0 = engine.stats["kv_bytes_alloc"]
+        res = engine.run(mk())
+        outs[pc] = [r.tokens for r in res]
+        stats[pc] = dict(engine.stats, kv_delta=engine.stats["kv_bytes_alloc"]
+                         - kv0)
+        _assert_drained_leak_free(engine)
+    assert outs[True] == outs[False]
+    assert stats[True]["prefix_hits"] == 4
+    assert stats[True]["prefix_hit_tokens"] == 4 * 24
+    # 3 of each request's 4 pages ride in shared: fewer chunks, fewer bytes
+    assert stats[True]["prefill_chunks"] < stats[False]["prefill_chunks"]
+    assert stats[True]["kv_delta"] < stats[False]["kv_delta"]
+    # the shared pages stay resident (refcount-0 cached) after the drain
+    assert stats[True]["kv_bytes_cached"] > 0
+
+
+def test_prefix_full_match_triggers_cow(setup):
+    """Resubmitting a page-aligned prompt matches every page; the final
+    token still recomputes (its logits seed decode), so the last shared
+    page is privatized copy-on-write and greedy outputs stay exact."""
+    cfg, params = setup
+    prompt = np.random.default_rng(23).integers(0, 256, 16).astype(np.int32)
+    outs = {}
+    for pc in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=2, max_len=64,
+                             paged=True, page_size=8, prefill_chunk=8,
+                             prefix_cache=pc)
+        r1 = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=5)])
+        r2 = engine.run([Request(uid=1, prompt=prompt.copy(),
+                                 max_new_tokens=5)])
+        outs[pc] = [r1[0].tokens, r2[0].tokens]
+        if pc:
+            assert engine.stats["prefix_cow"] == 1
+            assert engine.stats["prefix_hit_tokens"] == 15  # cap: last token
+        _assert_drained_leak_free(engine)
+    assert outs[True] == outs[False]
+    assert outs[True][0] == outs[True][1]
+
+
+def test_prefix_cache_eviction_under_pressure(setup):
+    """A pool too small to retain every finished prompt evicts cached
+    blocks LRU instead of refusing admission; every request completes and
+    nothing leaks."""
+    cfg, params = setup
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, prefill_chunk=8, prefix_cache=True,
+                         max_blocks=7)                     # 6 usable blocks
+    for i in range(5):
+        p = np.random.default_rng(30 + i).integers(0, 256, 16)
+        [r] = engine.run([Request(uid=i, prompt=p.astype(np.int32),
+                                  max_new_tokens=3)])
+        assert r.finish_reason == "length"
+    assert engine.stats["prefix_evictions"] > 0
+    _assert_drained_leak_free(engine)
+
+
+def test_prefix_lru_caps_cached_blocks(setup):
+    """--prefix-lru bounds the refcount-0 blocks retained after finish."""
+    cfg, params = setup
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, prefill_chunk=8, prefix_cache=True,
+                         prefix_lru=2)
+    for i in range(4):
+        p = np.random.default_rng(40 + i).integers(0, 256, 16)
+        engine.run([Request(uid=i, prompt=p.astype(np.int32),
+                            max_new_tokens=2)])
+    assert engine.prefix_index.n_evictable(engine.allocator) <= 2
+    _assert_drained_leak_free(engine)
+
+
+def test_prefix_cache_empty_prompt_and_bad_lru(setup):
+    """Regression: an empty prompt must not push the prefill offset
+    negative when the prefix cache is on (first_new clamps at 0), and a
+    negative prefix_lru is rejected at construction — the engine kwarg
+    path must not bypass the ModelConfig validation."""
+    cfg, params = setup
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, prefill_chunk=8, prefix_cache=True)
+    [r] = engine.run([Request(uid=0, prompt=np.zeros(0, np.int32),
+                              max_new_tokens=3)])
+    assert r.finish_reason == "length" and len(r.tokens) == 3
+    _assert_drained_leak_free(engine)
+    with pytest.raises(ValueError, match="prefix_lru"):
+        ServeEngine(cfg, params, max_slots=1, max_len=32, paged=True,
+                    page_size=8, prefix_cache=True, prefix_lru=-1)
+
+
+def test_prefix_cache_incapable_configs_serve_cold():
+    """Ring-window state is per-slot dense — a prefix hit cannot restore
+    it, so local-window configs silently serve cold (hits stay 0) instead
+    of erroring or corrupting."""
+    cfg = _local_cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, prefix_cache=True)
+    assert not engine.prefix_cache and not engine.prefix_capable
+    prompt = np.random.default_rng(50).integers(0, 256, 16).astype(np.int32)
+    engine.run([Request(uid=0, prompt=prompt, max_new_tokens=2)])
+    [r] = engine.run([Request(uid=1, prompt=prompt.copy(),
+                              max_new_tokens=2)])
+    assert r.finish_reason == "length"
+    assert engine.stats["prefix_hits"] == 0
     assert engine.allocator.n_free == engine.allocator.capacity
 
 
