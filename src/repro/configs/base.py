@@ -145,6 +145,21 @@ class ModelConfig:
     # configs only; others serve cold.
     prefix_cache: bool = False
     prefix_lru: int = 0
+    # serving scheduler (repro.serve.scheduler): admission policy over the
+    # waiting queue. ``sched_policy`` is "priority" (priority classes, EDF
+    # on TTFT SLOs, multi-tenant fair queuing, skip-with-aging — FCFS-
+    # equivalent when requests carry no priorities/users/SLOs) or "fcfs"
+    # (strict arrival order, legacy no-overtaking behavior). ``sched_aging``
+    # is the skipped-admission-pass count that promotes a blocked request to
+    # a pool reservation (0 = never, unbounded overtaking). ``preemption``
+    # lets a blocked higher-priority request evict a lower-priority slot
+    # (paged layout only); ``overlap_decode`` double-buffers the decode
+    # dispatch so host bookkeeping overlaps device compute (token streams
+    # identical, ids surface one step later).
+    sched_policy: str = "priority"
+    sched_aging: int = 64
+    preemption: bool = False
+    overlap_decode: bool = False
     # kernel selection flows through the backend registry
     # (repro.kernels.dispatch): "" keeps the pure-XLA paths (the only option
     # for training — kernel backends are forward/inference paths); "auto"
@@ -173,6 +188,15 @@ class ModelConfig:
             raise ValueError("page_size and prefill_chunk must be >= 1")
         if self.prefix_lru < 0:
             raise ValueError("prefix_lru must be >= 0")
+        if self.sched_policy not in ("fcfs", "priority"):
+            raise ValueError(
+                f"sched_policy={self.sched_policy!r}; expected 'fcfs' or "
+                "'priority'")
+        if self.sched_aging < 0:
+            raise ValueError("sched_aging must be >= 0")
+        if self.preemption and not self.paged_kv:
+            raise ValueError("preemption requires paged_kv=True: dense "
+                             "slots hold no reclaimable blocks")
         _quant_names = ("", "int8", "fp8", "float8_e4m3fn")
         for field_name in ("weight_dtype", "kv_dtype"):
             if getattr(self, field_name) not in _quant_names:

@@ -17,6 +17,11 @@ from repro.models import init as model_init
 from repro.serve import Request, ServeEngine
 
 
+def _pct_ms(vals, q):
+    vals = [v for v in vals if v is not None]
+    return round(float(np.percentile(vals, q)) * 1e3, 1) if vals else None
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -61,6 +66,34 @@ def main(argv=None):
                     help="quantized paged KV pools (requires --paged)")
     ap.add_argument("--quant-block", type=int, default=None,
                     help="per-block weight-scale length (0 = per-channel)")
+    ap.add_argument("--sched", default=None, choices=("fcfs", "priority"),
+                    help="admission policy (default: cfg.sched_policy): "
+                         "'priority' = classes + EDF TTFT deadlines + "
+                         "fair queuing + skip-with-aging; 'fcfs' = strict "
+                         "arrival order")
+    ap.add_argument("--sched-aging", type=int, default=None,
+                    help="skipped passes before a blocked request reserves "
+                         "the pool (0 = never; default: cfg.sched_aging)")
+    ap.add_argument("--preemption", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="let a blocked higher-priority request evict a "
+                         "lower-priority slot; its pages are kept in the "
+                         "prefix index so resumption is a warm hit "
+                         "(requires --paged; default: cfg.preemption)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="double-buffer decode: dispatch step N+1 before "
+                         "syncing step N's ids (token-identical; default: "
+                         "cfg.overlap_decode)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority class stamped on every synthetic "
+                         "request (larger = more urgent)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="time-to-first-token SLO target stamped on every "
+                         "synthetic request (drives EDF + goodput)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="mean inter-token SLO target stamped on every "
+                         "synthetic request")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -80,7 +113,9 @@ def main(argv=None):
                          prefill_chunk=args.prefill_chunk,
                          max_blocks=args.max_blocks,
                          prefix_cache=args.prefix_cache,
-                         prefix_lru=args.prefix_lru)
+                         prefix_lru=args.prefix_lru,
+                         sched=args.sched, sched_aging=args.sched_aging,
+                         preemption=args.preemption, overlap=args.overlap)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -97,7 +132,10 @@ def main(argv=None):
         reqs.append(Request(uid=uid, prompt=prompt,
                             max_new_tokens=args.max_new,
                             temperature=args.temperature,
-                            frames=frames, extra_embeds=extra))
+                            frames=frames, extra_embeds=extra,
+                            priority=args.priority,
+                            slo_ttft_ms=args.slo_ttft_ms,
+                            slo_itl_ms=args.slo_itl_ms))
 
     t0 = time.time()
     results = engine.run(reqs)
@@ -119,6 +157,16 @@ def main(argv=None):
         "kv_bytes_cached": engine.stats["kv_bytes_cached"],
         "kv_bytes_per_request": (engine.stats["kv_bytes_alloc"]
                                  // max(len(results), 1)),
+        "sched": engine.scheduler.policy,
+        "sched_skips": engine.stats["sched_skips"],
+        "preemptions": engine.stats["preemptions"],
+        "ttft_p50_ms": _pct_ms([r.ttft_s for r in results], 50),
+        "ttft_p99_ms": _pct_ms([r.ttft_s for r in results], 99),
+        "goodput": (round(engine.stats["slo_met"]
+                          / max(engine.stats["slo_met"]
+                                + engine.stats["slo_missed"], 1), 3)
+                    if args.slo_ttft_ms is not None
+                    or args.slo_itl_ms is not None else None),
     }, indent=1))
     assert all(r.finish_reason for r in results), "unfinished requests"
 

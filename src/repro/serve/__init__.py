@@ -1,5 +1,6 @@
 from repro.serve.engine import BlockAllocator, Request, Result, ServeEngine
 from repro.serve.prefix import PrefixIndex, page_hashes
+from repro.serve.scheduler import SchedEntry, Scheduler
 
 __all__ = ["BlockAllocator", "PrefixIndex", "Request", "Result",
-           "ServeEngine", "page_hashes"]
+           "SchedEntry", "Scheduler", "ServeEngine", "page_hashes"]

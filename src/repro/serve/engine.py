@@ -25,6 +25,19 @@ so a hot system prompt's KV survives between requests at zero steady-state
 cost. All-full-attention configs only (ring/recurrent per-slot state cannot
 be restored from the pool); incapable configs serve cold.
 
+Admission order is owned by a :class:`repro.serve.scheduler.Scheduler`
+policy layer: priority classes, per-request SLO deadlines (TTFT targets go
+earliest-deadline-first once urgent), multi-tenant fair queuing over
+``Request.user``, and — the head-of-line fix — *skip-with-aging*: a request
+blocked on pool resources is skipped in favor of smaller ones that fit now,
+until aging promotes it to a reservation nothing may overtake. With
+``preemption=True`` a high-priority arrival that cannot get blocks evicts a
+lower-priority victim: the victim's fully-written pages are published into
+the prefix index (when enabled), its blocks released through the refcount
+path, and the request requeued with its generated tokens folded into the
+prompt — resumption chunk-prefills only the un-cached tail via
+``first_new_pos``, so preemption costs a warm prefix hit, not a byte swap.
+
 Prefill is **chunked**: prompts advance ``prefill_chunk`` tokens per engine
 step through one jitted ``extend_step`` graph (ragged tails ride in the same
 shape behind an ``n_valid`` scalar), interleaved with decode steps for the
@@ -37,15 +50,23 @@ Sampling is fused into the jitted step (per-slot temperatures + PRNG key as
 inputs): each ``step()`` syncs only the sampled token ids to host, never the
 ``(max_slots, vocab)`` logits. Cache buffers are donated through every
 jitted update, so admission/decode cost scales with the written region, not
-the pool.
+the pool. With ``overlap=True`` the decode loop double-buffers: step N+1 is
+dispatched on device (fed step N's sampled ids *as a device array*) before
+step N's ids are synced to host, so host bookkeeping and admission overlap
+device compute — token streams are identical, ids just reach callbacks one
+step later.
+
+Tokens stream out as they are sampled: every append stamps a
+``perf_counter`` timestamp into ``Result.token_ts`` and fires the request's
+``on_token`` callback; :meth:`ServeEngine.stream` wraps submit+step into a
+per-request iterator.
 """
 from __future__ import annotations
 
 import contextlib
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass, field, replace as dc_replace
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +79,7 @@ from repro.models.cache import copy_block, default_n_blocks, init_cache, \
     kv_bytes, n_blocks_for_bytes, pages_per_slot
 from repro.quant import is_quant_dtype, quantize_params
 from repro.serve.prefix import PrefixIndex, page_hashes
+from repro.serve.scheduler import Scheduler
 
 PyTree = Any
 
@@ -73,16 +95,40 @@ class Request:
     temperature: float = 0.0                # 0 => greedy
     frames: np.ndarray | None = None        # enc-dec (audio) models
     extra_embeds: np.ndarray | None = None  # vlm models
+    # scheduling (repro.serve.scheduler)
+    priority: int = 0                       # larger = more urgent
+    user: str | None = None                 # tenant for fair queuing
+    slo_ttft_ms: float | None = None        # time-to-first-token target
+    slo_itl_ms: float | None = None         # mean inter-token target
+    #: streaming callback, called as ``on_token(token, result)`` the moment
+    #: each token reaches the host (with overlap, one step after sampling)
+    on_token: Callable[[int, "Result"], None] | None = None
 
 
 @dataclass
 class Result:
     uid: int
     tokens: list[int] = field(default_factory=list)
-    finish_reason: str = ""                 # eos | length | rejected
-    detail: str = ""                        # rejection cause, when rejected
+    finish_reason: str = ""                 # eos | length | rejected | truncated
+    detail: str = ""                        # rejection/truncation cause
     prefill_s: float = 0.0
     decode_steps: int = 0
+    submit_s: float = 0.0                   # perf_counter at submit
+    token_ts: list[float] = field(default_factory=list)  # one per token
+    preempted: int = 0                      # times evicted and requeued
+    slo_met: bool | None = None             # None = request had no SLO
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Submit-to-first-token latency (queueing + prefill)."""
+        return (self.token_ts[0] - self.submit_s) if self.token_ts else None
+
+    @property
+    def itl_s(self) -> float | None:
+        """Mean inter-token latency over the decoded tokens."""
+        if len(self.token_ts) < 2:
+            return None
+        return (self.token_ts[-1] - self.token_ts[0]) / (len(self.token_ts) - 1)
 
 
 class BlockAllocator:
@@ -216,6 +262,14 @@ def _sample(logits, temps, key):
     return jnp.where(temps <= 0, greedy, sampled).astype(jnp.int32)
 
 
+@dataclass
+class _Pending:
+    """One dispatched-but-unsynced decode step (overlap double-buffer)."""
+    ids: Any                 # (max_slots,) int32 device array
+    mask: np.ndarray         # slots this dispatch decoded
+    uids: np.ndarray         # slot -> uid snapshot at dispatch time
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *, max_slots: int = 4,
                  max_len: int = 512, eos_id: int | None = None, seed: int = 0,
@@ -225,7 +279,11 @@ class ServeEngine:
                  max_blocks: int | None = None,
                  kv_budget_bytes: int | None = None,
                  prefix_cache: bool | None = None,
-                 prefix_lru: int | None = None):
+                 prefix_lru: int | None = None,
+                 sched: str | None = None,
+                 sched_aging: int | None = None,
+                 preemption: bool | None = None,
+                 overlap: bool | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
@@ -255,6 +313,16 @@ class ServeEngine:
         if self.paged and part is not None:
             raise ValueError("paged serving is local-only: SPMD serving "
                              "keeps the dense layout")
+        # scheduling policy layer: admission order, SLOs, fairness, aging
+        self.scheduler = Scheduler(
+            sched or cfg.sched_policy,
+            aging_skips=cfg.sched_aging if sched_aging is None
+            else sched_aging)
+        self.preemption = cfg.preemption if preemption is None else preemption
+        if self.preemption and not self.paged:
+            raise ValueError("preemption requires the paged (block-pool) "
+                             "layout: dense slots hold no reclaimable blocks")
+        self.overlap = cfg.overlap_decode if overlap is None else overlap
         # multi-precision serving (repro.quant): post-load weight
         # quantization keyed off cfg.weight_dtype — local-only (SPMD graphs
         # keep the dense master params), applied here so callers need no
@@ -326,7 +394,9 @@ class ServeEngine:
         # slot bookkeeping (host side)
         self.phase = np.full(max_slots, FREE, np.int8)
         self.slot_uid = np.full(max_slots, -1, np.int64)
-        self.slot_pos = np.zeros(max_slots, np.int32)    # next write position
+        #: next KV write position per slot — advanced at *dispatch* time, so
+        #: with overlap it can run one step ahead of the synced token lists
+        self.slot_pos = np.zeros(max_slots, np.int32)
         self.slot_budget = np.zeros(max_slots, np.int32)
         self.slot_temp = np.zeros(max_slots, np.float32)
         self.slot_blocks: list[list[int]] = [[] for _ in range(max_slots)]
@@ -338,7 +408,19 @@ class ServeEngine:
         #: read-only from shared blocks
         self._first_new = np.zeros(max_slots, np.int32)
         self._t0 = np.zeros(max_slots, np.float64)
-        self.queue: deque[Request] = deque()
+        # per-slot scheduling state (preemption victims, requeue identity)
+        self._slot_req: list[Request | None] = [None] * max_slots
+        self._slot_legacy = np.zeros(max_slots, bool)
+        self._slot_prio = np.zeros(max_slots, np.int32)
+        self._slot_seq = np.zeros(max_slots, np.int64)   # admission recency
+        self._slot_sched_seq = np.zeros(max_slots, np.int64)
+        #: len(res.tokens) at admission — length finishes compare *emitted*
+        #: tokens against the segment budget, because with overlap
+        #: ``slot_budget`` is decremented at dispatch and runs one
+        #: speculative step ahead of the synced token list
+        self._slot_tok0 = np.zeros(max_slots, np.int64)
+        self._admit_seq = 0
+        self._pending: _Pending | None = None
         self.results: dict[int, Result] = {}
         self._prefill_cache: dict[tuple, Any] = {}
         self._decode_fn = jax.jit(self._decode_all, donate_argnums=(1,))
@@ -352,13 +434,20 @@ class ServeEngine:
                       "prefill_recompiles": 0, "rejected": 0,
                       "kv_bytes_alloc": 0, "kv_bytes_cached": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefix_cow": 0, "prefix_evictions": 0}
+                      "prefix_cow": 0, "prefix_evictions": 0,
+                      "preemptions": 0, "sched_skips": 0,
+                      "slo_met": 0, "slo_missed": 0}
 
     # ------------------------------------------------------------------
     @property
     def active(self) -> np.ndarray:
         """Slots currently owned by a request (prefilling or decoding)."""
         return self.phase != FREE
+
+    @property
+    def queue(self) -> list[Request]:
+        """Waiting requests in arrival order (scheduler-owned)."""
+        return [e.req for e in self.scheduler.entries()]
 
     def _kernel_scope(self):
         """Backend/block-tuning scope for prefill and decode graphs. SPMD
@@ -447,11 +536,42 @@ class ServeEngine:
             self._prefill_cache[key] = jax.jit(fn)
         return self._prefill_cache[key]
 
-    # ---- scheduling ----------------------------------------------------
+    # ---- streaming ----------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
-        self.results[req.uid] = Result(uid=req.uid)
+        self.results[req.uid] = Result(uid=req.uid,
+                                       submit_s=time.perf_counter())
+        self.scheduler.submit(req)
 
+    def stream(self, req: Request, *, max_steps: int = 100000
+               ) -> Iterator[int]:
+        """Submit ``req`` and yield its tokens as they arrive, stepping the
+        engine (and any other in-flight requests) between yields."""
+        self.submit(req)
+        res = self.results[req.uid]
+        sent = steps = 0
+        while True:
+            while sent < len(res.tokens):
+                yield res.tokens[sent]
+                sent += 1
+            if res.finish_reason:
+                return
+            if steps >= max_steps:
+                self._truncate()
+                continue
+            self.step()
+            steps += 1
+
+    def _emit(self, slot: int, tok: int):
+        """Append one sampled token to the slot's result: timestamped for
+        TTFT/ITL accounting, streamed through the request's callback."""
+        res = self.results[self.slot_uid[slot]]
+        res.tokens.append(tok)
+        res.token_ts.append(time.perf_counter())
+        req = self._slot_req[slot]
+        if req is not None and req.on_token is not None:
+            req.on_token(tok, res)
+
+    # ---- scheduling ----------------------------------------------------
     def _reject(self, req: Request, why: str):
         """Graceful per-request rejection: the engine loop keeps serving."""
         res = self.results[req.uid]
@@ -486,119 +606,253 @@ class ServeEngine:
                 self.block_tables[slot, p] = dst
                 self.stats["prefix_cow"] += 1
 
+    # ---- preemption ----------------------------------------------------
+    def _preempt_for(self, prio: int) -> bool:
+        """Free resources for a priority-``prio`` arrival: evict one victim
+        slot of strictly lower priority (lowest class first, then the most
+        recently admitted — the least sunk work). Returns True when anything
+        may have freed, so the caller re-checks fit before preempting more.
+
+        A pending overlapped decode is flushed first: its in-flight sampled
+        ids must land before a victim's generated tokens are folded into its
+        resumption prompt (and the flush itself can finish slots, making
+        the preemption unnecessary)."""
+        if not self.preemption:
+            return False
+        if self._pending is not None:
+            self._sync_pending()
+            return True
+        cands = [s for s in range(self.max_slots)
+                 if self.phase[s] != FREE and not self._slot_legacy[s]
+                 and self._slot_prio[s] < prio]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda s: (-int(self._slot_prio[s]),
+                                           int(self._slot_seq[s])))
+        self._preempt(victim)
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``: publish its fully-written pages into the prefix
+        index (so resumption is a warm hit, not a recompute), release its
+        blocks through the refcounted path (indexed pages stay cached,
+        fresh ones free — a mid-prefill victim rolls back exactly like a
+        failed admission), and requeue the request with its generated
+        tokens folded into the prompt at its original place in line."""
+        uid = int(self.slot_uid[slot])
+        res = self.results[uid]
+        req = self._slot_req[slot]
+        if self.phase[slot] == PREFILL:
+            written = int(self._prefill_off[slot])
+            new_prompt = np.asarray(req.prompt, np.int32)
+            self._prefilling.pop(slot, None)
+        else:
+            # rows [0, slot_pos) are written; the last sampled token's KV is
+            # not (it would be written by the next decode step), so the
+            # resumption prompt = written tokens + that trailing token, and
+            # its chunked prefill re-derives exactly the logits decode
+            # would have produced next
+            written = int(self.slot_pos[slot])
+            gen = [t for t in res.tokens[len(res.tokens)
+                                         - (written + 1
+                                            - len(req.prompt)):]]
+            new_prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(gen, np.int32)])
+        new_budget = int(self.slot_budget[slot])
+        if self.prefix_index is not None:
+            n_full = written // self.page_size
+            if n_full:
+                # full pages of the written region (prompt AND generated
+                # tokens) are valid chain entries: the resumption — or any
+                # request sharing the extended prefix — adopts them
+                seq_tokens = (new_prompt if self.phase[slot] != PREFILL
+                              else np.asarray(req.prompt, np.int32))
+                self.prefix_index.publish(seq_tokens,
+                                          self.slot_blocks[slot][:n_full])
+        self.allocator.release(self.slot_blocks[slot])
+        if self.prefix_index is not None:
+            self.prefix_index.trim(self.allocator)
+        self.slot_blocks[slot] = []
+        self.block_tables[slot, :] = 0
+        self.phase[slot] = FREE
+        self.slot_uid[slot] = -1
+        self._slot_req[slot] = None
+        res.preempted += 1
+        self.stats["preemptions"] += 1
+        self.scheduler.requeue(
+            dc_replace(req, prompt=new_prompt, max_new_tokens=new_budget),
+            seq=int(self._slot_sched_seq[slot]), submit_s=res.submit_s)
+
+    # ---- admission -----------------------------------------------------
+    def _free_slot(self) -> int | None:
+        for s in range(self.max_slots):
+            if self.phase[s] == FREE:
+                return s
+        return None
+
     def _admit(self):
-        """Fill free slots from the queue (FCFS). Paged admission is gated
-        on free *blocks* for prompt + generation budget; a head-of-queue
-        request that must wait for blocks stalls admission (no overtaking),
-        an impossible request is rejected instead of crashing the loop."""
-        for slot in range(self.max_slots):
-            while self.queue and self.phase[slot] == FREE:
-                req = self.queue[0]
-                n_tokens = len(req.prompt) + req.max_new_tokens
-                if n_tokens > self.max_len:
-                    self.queue.popleft()
-                    self._reject(req, f"exceeds max_len: prompt+budget "
-                                      f"{n_tokens} tokens > {self.max_len}")
+        """Fill free slots in scheduler order. A request blocked on pool
+        resources is *skipped* (smaller ones behind it admit now — the
+        head-of-line fix) and aged: once promoted to a reservation, nothing
+        overtakes it until it admits. Impossible requests reject instead of
+        crashing the loop; with preemption enabled, a blocked high-priority
+        request evicts lower-priority victims first."""
+        guard = 0
+        while self.scheduler and guard <= 4 * self.max_slots + 8:
+            guard += 1
+            if not self._admit_pass():
+                return
+
+    def _admit_pass(self) -> bool:
+        """One pass over the scheduler order. Returns True when a
+        preemption changed the resource picture and the pass should
+        restart."""
+        fcfs = self.scheduler.policy == "fcfs"
+        for entry in self.scheduler.order():
+            req = entry.req
+            n_tokens = len(req.prompt) + req.max_new_tokens
+            if n_tokens > self.max_len:
+                self.scheduler.remove(entry)
+                self._reject(req, f"exceeds max_len: prompt+budget "
+                                  f"{n_tokens} tokens > {self.max_len}")
+                continue
+            legacy = (self.cfg.encoder is not None
+                      or req.frames is not None
+                      or req.extra_embeds is not None
+                      or self.part is not None)
+            if legacy and is_quant_dtype(self.cfg.kv_dtype):
+                # the whole-prompt prefill commit writes dense rows —
+                # incompatible with quantized pools
+                self.scheduler.remove(entry)
+                self._reject(req, "quantized KV serves chunked-prefill "
+                                  "requests only (no frames/embeds)")
+                continue
+            if self.paged:
+                total = self.allocator.pages_for(n_tokens)
+                if total > self.allocator.capacity:
+                    cap = self.allocator.capacity
+                    self.scheduler.remove(entry)
+                    self._reject(
+                        req,
+                        f"exceeds block pool: needs {total} blocks "
+                        f"({total * self._block_kv_bytes} KV bytes) > "
+                        f"capacity {cap} blocks "
+                        f"({cap * self._block_kv_bytes} KV bytes)")
                     continue
-                legacy = (self.cfg.encoder is not None
-                          or req.frames is not None
-                          or req.extra_embeds is not None
-                          or self.part is not None)
-                if legacy and is_quant_dtype(self.cfg.kv_dtype):
-                    # the whole-prompt prefill commit writes dense rows —
-                    # incompatible with quantized pools
-                    self.queue.popleft()
-                    self._reject(req, "quantized KV serves chunked-prefill "
-                                      "requests only (no frames/embeds)")
+            slot = self._free_slot()
+            if slot is None:
+                if self._preempt_for(int(req.priority)):
+                    return True              # resources moved: re-plan
+                return False                 # every slot busy: nobody admits
+            if self.paged:
+                if not self._admit_paged(entry, slot, n_tokens, legacy):
+                    if fcfs or self.scheduler.reserved(entry):
+                        # FCFS never overtakes; a reserved (aged) entry
+                        # holds the pool until it fits
+                        return False
                     continue
-                if self.paged:
-                    total = self.allocator.pages_for(n_tokens)
-                    if total > self.allocator.capacity:
-                        cap = self.allocator.capacity
-                        self.queue.popleft()
-                        self._reject(
-                            req,
-                            f"exceeds block pool: needs {total} blocks "
-                            f"({total * self._block_kv_bytes} KV bytes) > "
-                            f"capacity {cap} blocks "
-                            f"({cap * self._block_kv_bytes} KV bytes)")
-                        continue
-                    # prefix cache: map the longest indexed chain of this
-                    # prompt's pages read-only into the slot's block table
-                    # (refcount++ per page) and prefill only the tail
-                    matched: list[int] = []
-                    first_new = 0
-                    if self.prefix_cache and not legacy:
-                        # hash once per request: a head-of-queue request
-                        # stalled on free blocks retries every step and
-                        # must not re-hash its whole prompt each time
-                        hs = self._admit_hashes.get(req.uid)
-                        if hs is None:
-                            hs = page_hashes(req.prompt, self.page_size)
-                            self._admit_hashes[req.uid] = hs
-                        matched = self.prefix_index.lookup(
-                            req.prompt, self.allocator, hashes=hs)
-                        # clamp below by 0: an empty prompt must not push
-                        # the prefill offset negative
-                        first_new = max(0, min(len(matched) * self.page_size,
-                                               len(req.prompt) - 1))
-                    # a page-aligned full-prompt match still recomputes the
-                    # final token (its logits seed decode), so the last
-                    # matched page gets written mid-page -> privatize it
-                    # now via copy-on-write (counted into the grant, so the
-                    # pool can never strand a request mid-COW)
-                    cow = (bool(matched)
-                           and first_new < len(matched) * self.page_size)
-                    need = total - len(matched) + (1 if cow else 0)
-                    if need > self.allocator.n_available:
-                        # hand the prefix references back (refcount-0
-                        # indexed blocks return to cached, not freed)
-                        self.allocator.release(matched)
-                        return                    # wait for blocks to free
-                    try:
-                        fresh = self.allocator.alloc(need)
-                    except RuntimeError:
-                        # alloc rolled its partial grant back; hand the
-                        # prefix references back too and wait — admission
-                        # leaves no trace of the failed attempt
-                        self.allocator.release(matched)
-                        return
-                    if cow:
-                        shared = matched[-1]
-                        matched[-1] = fresh.pop(0)
-                        self.cache = self._copy_fn(
-                            self.cache, np.int32(shared),
-                            np.int32(matched[-1]))
-                        self.allocator.release([shared])
-                        self.stats["prefix_cow"] += 1
-                    blocks = matched + fresh
-                    self.slot_blocks[slot] = blocks
-                    self.block_tables[slot, :] = 0
-                    self.block_tables[slot, :len(blocks)] = blocks
-                    self._first_new[slot] = first_new
-                    self.stats["kv_bytes_alloc"] += (
-                        need * self._block_kv_bytes + self._slot_kv_bytes)
-                    if matched:
-                        self.stats["prefix_hits"] += 1
-                        self.stats["prefix_hit_tokens"] += first_new
-                else:
-                    self._first_new[slot] = 0
-                    self.stats["kv_bytes_alloc"] += self._slot_kv_bytes
-                self.queue.popleft()
-                self._admit_hashes.pop(req.uid, None)
-                self._t0[slot] = time.perf_counter()
-                self.slot_uid[slot] = req.uid
-                self.slot_temp[slot] = req.temperature
-                self.slot_budget[slot] = req.max_new_tokens
-                self.stats["prefills"] += 1
-                if legacy:
-                    self._prefill_whole(slot, req)
-                else:
-                    self.phase[slot] = PREFILL
-                    self._prefilling[slot] = req
-                    # chunked prefill starts at the first non-cached token:
-                    # everything below rode in read-only through the table
-                    self._prefill_off[slot] = self._first_new[slot]
+            else:
+                self._first_new[slot] = 0
+                self.stats["kv_bytes_alloc"] += self._slot_kv_bytes
+            self._place(entry, slot, legacy)
+        return False
+
+    def _admit_paged(self, entry, slot: int, n_tokens: int,
+                     legacy: bool) -> bool:
+        """Block-pool admission for one request: prefix lookup, grant, COW.
+        Returns False (after noting the skip) when blocks are short even
+        after preemption."""
+        req = entry.req
+        total = self.allocator.pages_for(n_tokens)
+        # prefix cache: map the longest indexed chain of this prompt's
+        # pages read-only into the slot's block table (refcount++ per
+        # page) and prefill only the tail
+        matched: list[int] = []
+        first_new = 0
+        if self.prefix_cache and not legacy:
+            # hash once per request: a request stalled on free blocks
+            # retries every step and must not re-hash its whole prompt
+            hs = self._admit_hashes.get(req.uid)
+            if hs is None:
+                hs = page_hashes(req.prompt, self.page_size)
+                self._admit_hashes[req.uid] = hs
+            matched = self.prefix_index.lookup(
+                req.prompt, self.allocator, hashes=hs)
+            # clamp below by 0: an empty prompt must not push the
+            # prefill offset negative
+            first_new = max(0, min(len(matched) * self.page_size,
+                                   len(req.prompt) - 1))
+        # a page-aligned full-prompt match still recomputes the final
+        # token (its logits seed decode), so the last matched page gets
+        # written mid-page -> privatize it now via copy-on-write
+        # (counted into the grant, so the pool can never strand a
+        # request mid-COW)
+        cow = (bool(matched)
+               and first_new < len(matched) * self.page_size)
+        need = total - len(matched) + (1 if cow else 0)
+        while (need > self.allocator.n_available
+               and self._preempt_for(int(req.priority))):
+            pass                      # each eviction is re-checked
+        if need > self.allocator.n_available:
+            # hand the prefix references back (refcount-0 indexed blocks
+            # return to cached, not freed) and note the skip for aging
+            self.allocator.release(matched)
+            self.scheduler.note_skip(entry)
+            return False
+        try:
+            fresh = self.allocator.alloc(need)
+        except RuntimeError:
+            # alloc rolled its partial grant back; hand the prefix
+            # references back too — admission leaves no trace
+            self.allocator.release(matched)
+            self.scheduler.note_skip(entry)
+            return False
+        if cow:
+            shared = matched[-1]
+            matched[-1] = fresh.pop(0)
+            self.cache = self._copy_fn(
+                self.cache, np.int32(shared), np.int32(matched[-1]))
+            self.allocator.release([shared])
+            self.stats["prefix_cow"] += 1
+        blocks = matched + fresh
+        self.slot_blocks[slot] = blocks
+        self.block_tables[slot, :] = 0
+        self.block_tables[slot, :len(blocks)] = blocks
+        self._first_new[slot] = first_new
+        self.stats["kv_bytes_alloc"] += (
+            need * self._block_kv_bytes + self._slot_kv_bytes)
+        if matched:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += first_new
+        return True
+
+    def _place(self, entry, slot: int, legacy: bool) -> None:
+        """Bind an admitted request to its slot and start prefill."""
+        req = entry.req
+        self.scheduler.note_admitted(entry,
+                                     len(req.prompt) + req.max_new_tokens)
+        self._admit_hashes.pop(req.uid, None)
+        self._t0[slot] = time.perf_counter()
+        self.slot_uid[slot] = req.uid
+        self.slot_temp[slot] = req.temperature
+        self.slot_budget[slot] = req.max_new_tokens
+        self._slot_req[slot] = req
+        self._slot_legacy[slot] = legacy
+        self._slot_prio[slot] = req.priority
+        self._slot_seq[slot] = self._admit_seq
+        self._slot_sched_seq[slot] = entry.seq
+        self._slot_tok0[slot] = len(self.results[req.uid].tokens)
+        self._admit_seq += 1
+        self.stats["prefills"] += 1
+        if legacy:
+            self._prefill_whole(slot, req)
+        else:
+            self.phase[slot] = PREFILL
+            self._prefilling[slot] = req
+            # chunked prefill starts at the first non-cached token:
+            # everything below rode in read-only through the table
+            self._prefill_off[slot] = self._first_new[slot]
 
     def _prefill_whole(self, slot: int, req: Request):
         prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
@@ -660,22 +914,42 @@ class ServeEngine:
                 self.phase[slot] = DECODE
                 self._finish_prefill(slot, int(tok[0]), len(prompt))
 
+    def _emitted(self, slot: int) -> int:
+        """Tokens emitted in this admission segment (synced to host)."""
+        return (len(self.results[self.slot_uid[slot]].tokens)
+                - int(self._slot_tok0[slot]))
+
     def _finish_prefill(self, slot: int, first: int, length: int):
         res = self.results[self.slot_uid[slot]]
-        res.tokens.append(first)
-        res.prefill_s = time.perf_counter() - self._t0[slot]
+        self._emit(slot, first)
+        if res.prefill_s == 0.0:    # resumption keeps the original TTFT
+            res.prefill_s = time.perf_counter() - self._t0[slot]
         self.slot_pos[slot] = length  # position of `first` when decoded
         self.slot_budget[slot] -= 1
         if self.eos_id is not None and first == self.eos_id:
             self._finish(slot, "eos")
-        elif self.slot_budget[slot] <= 0:
+        elif self._emitted(slot) >= self._slot_req[slot].max_new_tokens:
             self._finish(slot, "length")
 
     def _finish(self, slot: int, reason: str):
         res = self.results[self.slot_uid[slot]]
         res.finish_reason = reason
+        req = self._slot_req[slot]
+        if (req is not None and reason in ("eos", "length")
+                and (req.slo_ttft_ms is not None
+                     or req.slo_itl_ms is not None)):
+            ok = True
+            if req.slo_ttft_ms is not None:
+                ok &= (res.ttft_s is not None
+                       and res.ttft_s * 1e3 <= req.slo_ttft_ms)
+            if req.slo_itl_ms is not None and res.itl_s is not None:
+                ok &= res.itl_s * 1e3 <= req.slo_itl_ms
+            res.slo_met = bool(ok)
+            self.stats["slo_met" if ok else "slo_missed"] += 1
         self.phase[slot] = FREE
         self.slot_uid[slot] = -1
+        self._slot_req[slot] = None
+        self._prefilling.pop(slot, None)
         if self.paged and self.slot_blocks[slot]:
             # drop this slot's references immediately: unshared blocks are
             # admittable this very step, and fully-written prompt pages
@@ -687,37 +961,84 @@ class ServeEngine:
             self.slot_blocks[slot] = []
             self.block_tables[slot, :] = 0
 
+    # ---- decode (double-buffered) --------------------------------------
     def _decode(self):
-        dec = self.phase == DECODE
+        """Dispatch one decode step, then sync. Without overlap the sync is
+        immediate (legacy behavior). With overlap the *previous* step's ids
+        sync after this step's dispatch is already on the device — host
+        bookkeeping and the next admission run while the device computes,
+        at the cost of ids reaching callbacks one step late."""
+        prev = self._pending
+        self._pending = self._dispatch_decode(prev)
+        if prev is not None:
+            self._sync(prev)
+        if not self.overlap and self._pending is not None:
+            p, self._pending = self._pending, None
+            self._sync(p)
+
+    def _dispatch_decode(self, prev: _Pending | None) -> _Pending | None:
+        """Enqueue one decode step on device. Continuing slots take their
+        token feed from ``prev``'s device ids (never synced to host);
+        slots that just finished prefill take their host-known first token.
+        Positions and budgets advance at dispatch, so the mask and the COW
+        guard stay exact even while ids are in flight."""
+        dec = (self.phase == DECODE) & (self.slot_budget > 0)
         if not dec.any():
-            return
-        # last sampled token per slot feeds the next decode step
+            return None
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for slot in np.nonzero(dec)[0]:
-            tokens[slot, 0] = self.results[self.slot_uid[slot]].tokens[-1]
+            res = self.results[self.slot_uid[slot]]
+            if res.tokens:
+                tokens[slot, 0] = res.tokens[-1]
             # a decode write to a prefix-shared page privatizes it first
             self._cow_pages(slot, int(self.slot_pos[slot]),
                             int(self.slot_pos[slot]) + 1)
+        feed = jnp.asarray(tokens)
+        if prev is not None:
+            # double-buffer: the last sampled ids are still on device
+            feed = jnp.where(jnp.asarray(prev.mask)[:, None],
+                             prev.ids[:, None], feed)
         self.rng, k = jax.random.split(self.rng)
         with self._kernel_scope():
             ids, self.cache = self._decode_fn(
-                self.params, self.cache, jnp.asarray(tokens),
+                self.params, self.cache, feed,
                 jnp.asarray(self.slot_pos), jnp.asarray(dec), self._tables(),
                 jnp.asarray(self.slot_temp), k)
-        ids = np.asarray(ids)
         self.stats["decode_steps"] += 1
-        for slot in np.nonzero(dec)[0]:
-            res = self.results[self.slot_uid[slot]]
+        self.slot_pos[dec] += 1
+        self.slot_budget[dec] -= 1
+        return _Pending(ids=ids, mask=dec, uids=self.slot_uid.copy())
+
+    def _sync(self, p: _Pending):
+        """Bring one dispatched decode step's sampled ids to host and run
+        the bookkeeping: stream/append tokens, finish on eos or exhausted
+        budget. Ids for requests that finished while the step was in
+        flight (an eos discovered one sync earlier) are discarded — their
+        slot was dispatched speculatively."""
+        ids = np.asarray(p.ids)
+        for slot in np.nonzero(p.mask)[0]:
+            uid = int(p.uids[slot])
+            res = self.results.get(uid)
+            if (res is None or res.finish_reason
+                    or self.slot_uid[slot] != uid):
+                continue                    # speculative overflow step
             tok = int(ids[slot])
-            res.tokens.append(tok)
+            self._emit(slot, tok)
             res.decode_steps += 1
-            self.slot_pos[slot] += 1
-            self.slot_budget[slot] -= 1
             if self.eos_id is not None and tok == self.eos_id:
                 self._finish(slot, "eos")
-            elif self.slot_budget[slot] <= 0:
+            elif self._emitted(slot) >= self._slot_req[slot].max_new_tokens:
+                # emitted-count check, NOT slot_budget: with overlap the
+                # budget already paid for the next in-flight dispatch
                 self._finish(slot, "length")
 
+    def _sync_pending(self):
+        """Flush the overlapped decode step, if any (idempotent)."""
+        p, self._pending = self._pending, None
+        if p is not None:
+            self._sync(p)
+
+    # ---- engine loop ---------------------------------------------------
     def step(self) -> int:
         """Admit, advance prefill chunks, one decode step. Returns #busy."""
         self._admit()
@@ -732,15 +1053,46 @@ class ServeEngine:
             self.stats["kv_bytes_cached"] = (
                 self.prefix_index.n_evictable(self.allocator)
                 * self._block_kv_bytes)
+        self.stats["sched_skips"] = self.scheduler.stats["skips"]
         return int((self.phase != FREE).sum())
+
+    def _busy(self) -> bool:
+        return (bool(self.scheduler) or bool((self.phase != FREE).any())
+                or self._pending is not None)
+
+    def _truncate(self):
+        """Drain a run that hit ``max_steps``: flush the overlapped step so
+        no sampled token is lost, finish every in-flight slot as
+        ``truncated`` (blocks released — leak-free), and mark still-queued
+        requests the same way. Partial tokens stay on the Result."""
+        self._sync_pending()
+        for slot in range(self.max_slots):
+            if self.phase[slot] == FREE:
+                continue
+            res = self.results[self.slot_uid[slot]]
+            res.detail = ("prefill interrupted at max_steps"
+                          if self.phase[slot] == PREFILL
+                          else "decode interrupted at max_steps")
+            self._finish(slot, "truncated")
+        for entry in self.scheduler.drain():
+            res = self.results.get(entry.req.uid)
+            self._admit_hashes.pop(entry.req.uid, None)
+            if res is not None and not res.finish_reason:
+                res.finish_reason = "truncated"
+                res.detail = "still queued at max_steps"
 
     def run(self, requests: list[Request], *, max_steps: int = 100000
             ) -> list[Result]:
-        """Drive all requests to completion (continuous batching loop)."""
+        """Drive all requests to completion (continuous batching loop).
+        Hitting ``max_steps`` truncates cleanly: in-flight slots release
+        their blocks and every unfinished request gets
+        ``finish_reason="truncated"`` instead of a half-populated Result."""
         for r in requests:
             self.submit(r)
         steps = 0
-        while (self.queue or (self.phase != FREE).any()) and steps < max_steps:
+        while self._busy() and steps < max_steps:
             self.step()
             steps += 1
+        if self._busy():
+            self._truncate()
         return [self.results[r.uid] for r in requests]

@@ -1,0 +1,168 @@
+"""Admission scheduling policy for the serving engine.
+
+The engine loop used to be synchronous FCFS with head-of-line admission
+backpressure: one queued request that did not fit the block pool idled free
+slots and free blocks behind it. This module is the policy layer that
+replaces that deque — it owns the *waiting* requests and answers one
+question each engine step: in what order should admission try them?
+
+Policies
+--------
+
+``fcfs``
+    Arrival order, no overtaking — the legacy behavior, kept as the
+    baseline for the latency benchmark and for bug-for-bug comparisons.
+
+``priority`` (default)
+    A total order over waiting requests built from four signals, compared
+    lexicographically:
+
+    1. **reservation** (anti-starvation): a request that has been skipped
+       ``aging_skips`` times while blocked on pool resources is *reserved* —
+       it sorts to the absolute front and the engine stops overtaking it,
+       so draining traffic is guaranteed to admit it eventually. Aging is
+       the promotion mechanism: without it, skip-with-overtaking could
+       starve a large request forever behind a stream of small ones.
+    2. **priority class**: larger ``Request.priority`` is more urgent.
+    3. **SLO urgency (EDF)**: a request with a time-to-first-token target
+       (``slo_ttft_ms``) becomes *urgent* once less than half its target
+       remains until the deadline; urgent requests order earliest-deadline-
+       first within their priority class.
+    4. **multi-tenant fair queuing**: among the rest, the tenant
+       (``Request.user``) with the least admitted service (tokens) goes
+       first — a well-behaved interactive user is not queued behind a bulk
+       tenant's backlog at equal priority. Ties fall back to arrival order.
+
+The scheduler never touches slots, blocks, or device state; the engine asks
+for :meth:`order`, tries each entry, and reports back via
+:meth:`note_admitted` / :meth:`note_skip`. Preempted requests re-enter
+through :meth:`requeue` keeping their original arrival sequence number (and
+submit timestamp), so a victim does not lose its place in line.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+#: scheduling policies understood by the engine / launcher.
+POLICIES = ("fcfs", "priority")
+
+#: fraction of the TTFT target that may remain before a request is treated
+#: as deadline-urgent (EDF within its priority class).
+URGENT_FRAC = 0.5
+
+
+@dataclass(eq=False)            # identity semantics: entries are removed by
+class SchedEntry:               # object, and Request holds ndarray fields
+    """One waiting request plus its scheduling bookkeeping."""
+    req: Any                    # repro.serve.engine.Request (duck-typed)
+    seq: int                    # arrival order; preserved across preemption
+    submit_s: float             # submission timestamp (perf_counter domain)
+    skips: int = 0              # admission passes that overtook this entry
+
+    @property
+    def uid(self) -> int:
+        return self.req.uid
+
+
+@dataclass
+class Scheduler:
+    policy: str = "priority"
+    #: skipped admission passes before a blocked entry reserves the pool
+    #: (0 = never reserve, i.e. unbounded overtaking).
+    aging_skips: int = 64
+    #: injectable clock for deterministic tests.
+    now: Callable[[], float] = time.perf_counter
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"sched policy {self.policy!r}; "
+                             f"expected one of {POLICIES}")
+        if self.aging_skips < 0:
+            raise ValueError("aging_skips must be >= 0")
+        self._entries: list[SchedEntry] = []
+        self._seq = 0
+        self._service: dict[Any, int] = {}      # user -> admitted tokens
+        self.stats = {"skips": 0, "aged": 0}
+
+    # ---- queue management -------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+    def entries(self) -> list[SchedEntry]:
+        """Waiting entries in arrival order (not scheduling order)."""
+        return sorted(self._entries, key=lambda e: e.seq)
+
+    def submit(self, req) -> SchedEntry:
+        e = SchedEntry(req, self._seq, self.now())
+        self._seq += 1
+        self._entries.append(e)
+        return e
+
+    def requeue(self, req, *, seq: int, submit_s: float) -> SchedEntry:
+        """Re-enter a preempted request at its original place in line."""
+        e = SchedEntry(req, seq, submit_s)
+        self._entries.append(e)
+        return e
+
+    def remove(self, entry: SchedEntry) -> None:
+        self._entries.remove(entry)
+
+    def drain(self) -> list[SchedEntry]:
+        """Remove and return every waiting entry (run truncation)."""
+        out, self._entries = self.entries(), []
+        return out
+
+    # ---- policy -----------------------------------------------------------
+    def reserved(self, entry: SchedEntry) -> bool:
+        """True once aging has promoted a skipped entry to the front: the
+        engine stops overtaking it until it admits."""
+        return bool(self.aging_skips) and entry.skips >= self.aging_skips
+
+    def deadline_s(self, entry: SchedEntry) -> float:
+        ttft = getattr(entry.req, "slo_ttft_ms", None)
+        if ttft is None:
+            return float("inf")
+        return entry.submit_s + ttft / 1e3
+
+    def urgent(self, entry: SchedEntry, now: float) -> bool:
+        ttft = getattr(entry.req, "slo_ttft_ms", None)
+        if ttft is None:
+            return False
+        return self.deadline_s(entry) - now <= URGENT_FRAC * ttft / 1e3
+
+    def _key(self, entry: SchedEntry, now: float):
+        if self.policy == "fcfs":
+            return (entry.seq,)
+        urgent = self.urgent(entry, now)
+        return (0 if self.reserved(entry) else 1,
+                -int(getattr(entry.req, "priority", 0)),
+                0 if urgent else 1,
+                self.deadline_s(entry) if urgent else float("inf"),
+                self._service.get(getattr(entry.req, "user", None), 0),
+                entry.seq)
+
+    def order(self) -> list[SchedEntry]:
+        """Snapshot of the waiting entries in admission-attempt order."""
+        now = self.now()
+        return sorted(self._entries, key=lambda e: self._key(e, now))
+
+    # ---- engine feedback --------------------------------------------------
+    def note_skip(self, entry: SchedEntry) -> None:
+        """The engine passed over ``entry`` (blocked on pool resources)."""
+        was = self.reserved(entry)
+        entry.skips += 1
+        self.stats["skips"] += 1
+        if not was and self.reserved(entry):
+            self.stats["aged"] += 1
+
+    def note_admitted(self, entry: SchedEntry, n_tokens: int) -> None:
+        """``entry`` was admitted: drop it and charge its tenant's service
+        (prompt + generation budget tokens) for fair queuing."""
+        self.remove(entry)
+        user = getattr(entry.req, "user", None)
+        self._service[user] = self._service.get(user, 0) + int(n_tokens)

@@ -1,6 +1,6 @@
 """Property-based invariants of the refcounted COW block allocator + prefix
-index — random alloc/share/adopt/release/publish/evict/trim action sequences
-checked against a pure-Python oracle after every step.
+index — random alloc/share/adopt/release/publish/evict/lookup/preempt
+action sequences checked against a pure-Python oracle after every step.
 
 Refcounted allocators are exactly the kind of code unit tests under-cover:
 the bugs live in *interleavings* (release-then-evict, adopt-then-rollback),
@@ -74,18 +74,26 @@ def _run_program(program: list[tuple[int, int]]) -> None:
     """Interpret (op, arg) pairs as allocator/index actions; check the
     invariants after every action. Infeasible actions (nothing live to
     share, nothing cached to evict, ...) degrade to no-ops, so any integer
-    program is a valid schedule."""
+    program is a valid schedule.
+
+    References are held in *groups* — one group models one engine slot's
+    block table — so the ``preempt`` action can exercise the engine's
+    eviction path: drop a whole group at once through
+    ``BlockAllocator.release`` (indexed blocks retained as cached, fresh
+    ones freed), exactly what a victim evicted mid-chunk-prefill does
+    before its pages are published."""
     alloc, index = _mk()
-    owners: list[int] = []      # one entry per reference the driver holds
+    groups: list[list[int]] = []    # one group per slot-like reference set
     published: list[np.ndarray] = []
     tag = 0
+    owners = lambda: [b for g in groups for b in g]
     for op, arg in program:
-        op = op % 7
+        op = op % 8
         if op == 0:                                   # alloc 1..3 blocks
             n = arg % 3 + 1
             before = (list(alloc._free), alloc.ref.copy())
             if n <= alloc.n_available:
-                owners.extend(alloc.alloc(n))
+                groups.append(alloc.alloc(n))
             else:
                 with pytest.raises(RuntimeError):
                     alloc.alloc(n)
@@ -94,26 +102,29 @@ def _run_program(program: list[tuple[int, int]]) -> None:
                 assert alloc.ref.tolist() == before[1].tolist()
                 assert set(alloc._free) >= set(before[0])
         elif op == 1:                                 # share a live block
-            live = sorted({b for b in owners})
+            live = sorted({b for b in owners()})
             if live:
                 blk = live[arg % len(live)]
                 alloc.incref(blk)
-                owners.append(blk)
+                groups.append([blk])
         elif op == 2:                                 # adopt a cached block
             cached = sorted(b for b in index.blocks if alloc.ref[b] == 0)
             if cached:
                 blk = cached[arg % len(cached)]
                 alloc.incref(blk)
-                owners.append(blk)
+                groups.append([blk])
         elif op == 3:                                 # release one reference
-            if owners:
-                blk = owners.pop(arg % len(owners))
+            nonempty = [g for g in groups if g]
+            if nonempty:
+                g = nonempty[arg % len(nonempty)]
+                blk = g.pop(arg % len(g))
                 alloc.decref(blk, retain=index.is_cached(blk))
+                groups = [g for g in groups if g]
             else:
                 with pytest.raises(RuntimeError):     # double free guarded
                     alloc.decref(1)
         elif op == 4:                                 # publish a live block
-            live = sorted({b for b in owners if not index.is_cached(b)})
+            live = sorted({b for b in owners() if not index.is_cached(b)})
             if live:
                 toks = _tokens(tag)
                 tag += 1
@@ -127,19 +138,24 @@ def _run_program(program: list[tuple[int, int]]) -> None:
         elif op == 6:                                 # lookup a published page
             if published:
                 hits = index.lookup(published[arg % len(published)], alloc)
-                owners.extend(hits)       # lookup hands back references
-        _check_invariants(alloc, index, owners)
+                if hits:
+                    groups.append(hits)   # lookup hands back references
+        elif op == 7:                                 # preempt a whole group
+            if groups:
+                g = groups.pop(arg % len(groups))
+                alloc.release(g)
+        _check_invariants(alloc, index, owners())
     # drain: releasing every outstanding reference must account for every
     # block as free or cached — nothing leaks
-    for blk in owners:
-        alloc.decref(blk, retain=index.is_cached(blk))
+    for g in groups:
+        alloc.release(g)
     _check_invariants(alloc, index, [])
     assert alloc.n_free + index.n_evictable(alloc) == alloc.capacity
 
 
 @pytest.mark.property
 @settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 63)),
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 63)),
                 max_size=80))
 def test_allocator_invariants_random_programs(program):
     _run_program(program)
@@ -152,7 +168,7 @@ def test_allocator_invariants_seeded(seed):
     on containers without hypothesis (where @given-tests skip)."""
     rng = np.random.default_rng(seed)
     program = [(int(a), int(b))
-               for a, b in zip(rng.integers(0, 7, 120),
+               for a, b in zip(rng.integers(0, 8, 120),
                                rng.integers(0, 64, 120))]
     _run_program(program)
 

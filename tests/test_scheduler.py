@@ -1,0 +1,137 @@
+"""Scheduler policy layer: admission ordering (priority / EDF / fair
+queuing), skip-with-aging reservations, and preemption requeue identity —
+pure host-side logic, no jax."""
+from __future__ import annotations
+
+import pytest
+
+from repro.serve import SchedEntry, Scheduler
+from repro.serve.scheduler import URGENT_FRAC
+
+
+class _Req:
+    """Duck-typed stand-in for repro.serve.engine.Request."""
+
+    def __init__(self, uid, priority=0, user=None, slo_ttft_ms=None):
+        self.uid = uid
+        self.priority = priority
+        self.user = user
+        self.slo_ttft_ms = slo_ttft_ms
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _uids(entries):
+    return [e.uid for e in entries]
+
+
+def test_policy_validated():
+    with pytest.raises(ValueError, match="policy"):
+        Scheduler("lifo")
+    with pytest.raises(ValueError, match="aging"):
+        Scheduler(aging_skips=-1)
+
+
+def test_fcfs_is_arrival_order():
+    s = Scheduler("fcfs")
+    for uid, prio in ((0, 0), (1, 9), (2, 3)):
+        s.submit(_Req(uid, priority=prio))
+    assert _uids(s.order()) == [0, 1, 2], "fcfs must ignore priorities"
+
+
+def test_priority_policy_defaults_to_fcfs_among_equals():
+    """Requests with no priorities/users/SLOs order exactly like fcfs —
+    the default policy is behavior-preserving for plain traffic."""
+    s = Scheduler("priority")
+    for uid in range(5):
+        s.submit(_Req(uid))
+    assert _uids(s.order()) == list(range(5))
+
+
+def test_priority_classes_dominate_arrival():
+    s = Scheduler("priority")
+    s.submit(_Req(0, priority=0))
+    s.submit(_Req(1, priority=2))
+    s.submit(_Req(2, priority=1))
+    s.submit(_Req(3, priority=2))
+    assert _uids(s.order()) == [1, 3, 2, 0]
+
+
+def test_edf_urgency_orders_within_class():
+    """A TTFT SLO only reorders once less than URGENT_FRAC of the target
+    remains; urgent entries go earliest-deadline-first."""
+    clk = _Clock()
+    s = Scheduler("priority", now=clk)
+    s.submit(_Req(0))                               # no SLO
+    s.submit(_Req(1, slo_ttft_ms=1000.0))           # deadline t=1.0
+    s.submit(_Req(2, slo_ttft_ms=400.0))            # deadline t=0.4
+    # far from every deadline: plain arrival order
+    assert _uids(s.order()) == [0, 1, 2]
+    # t=0.3: uid2 has 0.1s of a 0.4s target left (< URGENT_FRAC) -> urgent
+    clk.t = 0.4 - URGENT_FRAC * 0.4 + 0.1
+    assert _uids(s.order())[0] == 2
+    # t=0.9: both SLOs urgent, EDF puts the earlier deadline first
+    clk.t = 0.9
+    assert _uids(s.order()) == [2, 1, 0]
+
+
+def test_fair_queuing_balances_tenants():
+    """The tenant with the least admitted service goes first at equal
+    priority; charging service rotates the head."""
+    s = Scheduler("priority")
+    bulk = [s.submit(_Req(i, user="bulk")) for i in range(3)]
+    chat = s.submit(_Req(10, user="chat"))
+    assert _uids(s.order()) == [0, 1, 2, 10]        # no history yet
+    s.note_admitted(bulk[0], 1000)                  # bulk now owes service
+    assert _uids(s.order()) == [10, 1, 2]
+    s.note_admitted(chat, 2000)
+    assert _uids(s.order()) == [1, 2]
+
+
+def test_aging_promotes_skipped_entry_to_reservation():
+    """A blocked entry overtaken aging_skips times reserves the pool: it
+    sorts above everything, even higher priority classes."""
+    s = Scheduler("priority", aging_skips=3)
+    big = s.submit(_Req(0))
+    s.submit(_Req(1, priority=5))
+    assert not s.reserved(big)
+    for _ in range(3):
+        s.note_skip(big)
+    assert s.reserved(big)
+    assert _uids(s.order()) == [0, 1]
+    assert s.stats["aged"] == 1 and s.stats["skips"] == 3
+
+
+def test_aging_zero_never_reserves():
+    s = Scheduler("priority", aging_skips=0)
+    e = s.submit(_Req(0))
+    for _ in range(100):
+        s.note_skip(e)
+    assert not s.reserved(e)
+
+
+def test_requeue_keeps_place_in_line():
+    """A preempted request re-enters with its original seq: it outranks
+    later arrivals at equal priority."""
+    s = Scheduler("priority")
+    victim = s.submit(_Req(0))
+    s.submit(_Req(1))
+    seq, sub = victim.seq, victim.submit_s
+    s.note_admitted(victim, 10)
+    s.submit(_Req(2))
+    s.requeue(_Req(0), seq=seq, submit_s=sub)
+    assert _uids(s.order()) == [0, 1, 2]
+
+
+def test_drain_empties_in_arrival_order():
+    s = Scheduler("priority")
+    s.submit(_Req(0))
+    s.submit(_Req(1, priority=9))
+    out = s.drain()
+    assert _uids(out) == [0, 1] and len(s) == 0 and not s

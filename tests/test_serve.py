@@ -439,6 +439,288 @@ def test_prefix_cache_incapable_configs_serve_cold():
     assert engine.allocator.n_free == engine.allocator.capacity
 
 
+# --------------------------------------------------------------------------
+# scheduling: head-of-line fix, truncation, preemption, overlap, streaming
+# --------------------------------------------------------------------------
+def test_hol_small_request_overtakes_blocked_big_one(setup):
+    """Regression for the head-of-line admission stall: a 1-page request
+    queued behind a pool-sized one admits immediately under the priority
+    policy (skip-with-aging), while fcfs keeps the legacy no-overtaking
+    stall. Everything still completes either way."""
+    cfg, params = setup
+    rng = np.random.default_rng(60)
+    mk = lambda: [
+        Request(uid=0, prompt=rng0.integers(0, 256, 12).astype(np.int32),
+                max_new_tokens=4)                      # 16 tok -> 2 blocks
+        for rng0 in [np.random.default_rng(60)]] + [
+        Request(uid=1, prompt=np.asarray(
+            rng.integers(0, 256, 34), np.int32).copy(),
+                max_new_tokens=6),                     # 40 tok -> 5 blocks
+        Request(uid=2, prompt=np.asarray(
+            rng.integers(0, 256, 4), np.int32).copy(),
+                max_new_tokens=2)]                     # 6 tok -> 1 block
+    admitted = {}
+    for policy in ("priority", "fcfs"):
+        reqs = mk()
+        engine = ServeEngine(cfg, params, max_slots=2, max_len=64,
+                             paged=True, page_size=8, max_blocks=7,
+                             sched=policy)
+        engine.submit(reqs[0])
+        engine.step()                    # uid0 running: 4 of 6 blocks free
+        engine.submit(reqs[1])           # needs 5 blocks -> blocked
+        engine.submit(reqs[2])           # needs 1 block
+        engine.step()
+        # uid2 is small enough to admit AND finish within this one step
+        admitted[policy] = bool(engine.results[2].tokens)
+        steps = 0
+        while engine._busy():
+            engine.step()
+            steps += 1
+            assert steps < 2000
+        assert all(engine.results[r.uid].finish_reason == "length"
+                   for r in reqs), policy
+        _assert_drained_leak_free(engine)
+    assert admitted["priority"], \
+        "small request must overtake the blocked pool-sized one"
+    assert not admitted["fcfs"], \
+        "fcfs must keep the legacy no-overtaking stall"
+
+
+def test_aged_reservation_blocks_overtaking(setup):
+    """Once aging promotes a blocked request to a reservation, smaller
+    late arrivals stop overtaking it (starvation bound)."""
+    cfg, params = setup
+    rng = np.random.default_rng(61)
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, max_blocks=7, sched="priority",
+                         sched_aging=2)
+    engine.submit(Request(uid=0,
+                          prompt=rng.integers(0, 256, 12).astype(np.int32),
+                          max_new_tokens=20))          # 2 blocks, long-lived
+    engine.step()
+    big = Request(uid=1, prompt=rng.integers(0, 256, 34).astype(np.int32),
+                  max_new_tokens=6)                    # 5 blocks: blocked
+    engine.submit(big)
+    engine.step()
+    engine.step()                        # two skipped passes -> reserved
+    assert engine.scheduler.stats["aged"] == 1
+    engine.submit(Request(uid=2,
+                          prompt=rng.integers(0, 256, 4).astype(np.int32),
+                          max_new_tokens=2))           # would fit, must wait
+    engine.step()
+    assert 2 not in set(engine.slot_uid[engine.active].tolist()), \
+        "a reserved entry must not be overtaken"
+    steps = 0
+    while engine._busy():
+        engine.step()
+        steps += 1
+        assert steps < 2000
+    assert all(engine.results[u].finish_reason == "length" for u in range(3))
+    _assert_drained_leak_free(engine)
+
+
+@pytest.mark.parametrize("overlap", [False, True], ids=["sync", "overlap"])
+def test_run_max_steps_truncates_leak_free(setup, overlap):
+    """Hitting max_steps finishes in-flight slots as 'truncated' (partial
+    tokens kept, blocks released) and marks still-queued requests the same
+    way — no half-populated Results, no leaked blocks, and the engine keeps
+    serving afterwards."""
+    cfg, params = setup
+    reqs = _mixed_requests(cfg, 5, seed=62, lo=6, hi=14, new_lo=20,
+                           new_hi=30)
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, prefix_cache=True, overlap=overlap)
+    results = engine.run(reqs, max_steps=6)
+    assert all(r.finish_reason for r in results), "half-populated Result"
+    truncated = [r for r in results if r.finish_reason == "truncated"]
+    assert truncated, "max_steps=6 must interrupt these budgets"
+    assert any(r.tokens for r in truncated), "partial tokens must be kept"
+    assert any("queued" in r.detail for r in truncated), \
+        "never-admitted requests get a distinct detail"
+    assert not engine.active.any() and engine._pending is None
+    assert not engine._admit_hashes, "stale admission hash memo"
+    _assert_drained_leak_free(engine)
+    [r] = engine.run([Request(uid=99, prompt=np.arange(5, dtype=np.int32),
+                              max_new_tokens=3)])
+    assert r.finish_reason == "length" and len(r.tokens) == 3
+    _assert_drained_leak_free(engine)
+
+
+def test_preemption_decode_victim_resumes_exact(setup):
+    """Under pool pressure a high-priority arrival evicts the youngest
+    lower-priority decode; the victim's written pages ride the prefix index
+    so resumption is a warm hit, and every request's greedy tokens match
+    the unpreempted reference exactly."""
+    cfg, params = setup
+    rng = np.random.default_rng(63)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 256, 12).astype(np.int32),
+                    max_new_tokens=6)                  # 3 blocks each
+            for i in range(2)]
+    hi = Request(uid=2, prompt=rng.integers(0, 256, 8).astype(np.int32),
+                 max_new_tokens=4, priority=5)         # 2 blocks
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                         page_size=8, max_blocks=7, prefix_cache=True,
+                         preemption=True)
+    for r in reqs:
+        engine.submit(r)
+    for _ in range(4):                   # both decoding, pool exhausted
+        engine.step()
+    assert engine.allocator.n_free == 0
+    engine.submit(hi)
+    engine.step()
+    assert engine.stats["preemptions"] >= 1
+    assert 2 in set(engine.slot_uid[engine.active].tolist()), \
+        "high-priority request must admit via preemption"
+    steps = 0
+    while engine._busy():
+        engine.step()
+        steps += 1
+        assert steps < 2000
+    for req in reqs + [hi]:
+        res = engine.results[req.uid]
+        assert res.finish_reason == "length"
+        assert res.tokens == _ref_greedy(cfg, params, req.prompt,
+                                         req.max_new_tokens,
+                                         max_len=64), f"uid {req.uid}"
+    assert sum(engine.results[r.uid].preempted for r in reqs) >= 1
+    assert engine.stats["prefix_hits"] >= 1, \
+        "resumption should re-admit through the prefix index"
+    _assert_drained_leak_free(engine)
+
+
+def test_preemption_mid_prefill_rolls_back(setup):
+    """A victim evicted mid-chunk-prefill (pages allocated, nothing
+    published yet) rolls back through BlockAllocator.release like a failed
+    admission, requeues with its original prompt, and still produces exact
+    greedy tokens."""
+    cfg, params = setup
+    rng = np.random.default_rng(64)
+    victim = Request(uid=0, prompt=rng.integers(0, 256, 16).astype(np.int32),
+                     max_new_tokens=4)
+    hi = Request(uid=1, prompt=rng.integers(0, 256, 8).astype(np.int32),
+                 max_new_tokens=3, priority=5)
+    engine = ServeEngine(cfg, params, max_slots=1, max_len=64, paged=True,
+                         page_size=8, prefill_chunk=4, prefix_cache=True,
+                         preemption=True)
+    engine.submit(victim)
+    engine.step()                        # admitted, first chunk only
+    assert engine.phase[0] == 1 and 0 in engine._prefilling, \
+        "victim must still be mid-chunk-prefill"
+    engine.submit(hi)
+    engine.step()
+    assert engine.stats["preemptions"] == 1
+    assert engine.results[victim.uid].preempted == 1
+    steps = 0
+    while engine._busy():
+        engine.step()
+        steps += 1
+        assert steps < 2000
+    for req in (victim, hi):
+        res = engine.results[req.uid]
+        assert res.finish_reason == "length"
+        assert res.tokens == _ref_greedy(cfg, params, req.prompt,
+                                         req.max_new_tokens,
+                                         max_len=64), f"uid {req.uid}"
+    _assert_drained_leak_free(engine)
+
+
+@pytest.mark.parametrize("make_cfg", [_cfg, _local_cfg],
+                         ids=["global", "local-window"])
+def test_overlap_decode_token_parity(make_cfg):
+    """Overlapped (double-buffered) stepping is token-identical to the
+    synchronous loop on a fixed greedy trace — including a request that
+    finishes via eos while step N+1 is already dispatched (its speculative
+    overflow token is discarded)."""
+    cfg = make_cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_requests(cfg, 6, seed=65, lo=4, hi=16, new_lo=4, new_hi=9)
+    # make request 0 finish by eos mid-stream while others keep decoding:
+    # its 2nd greedy token becomes the eos id
+    ref0 = _ref_greedy(cfg, params, reqs[0].prompt, 3, max_len=64)
+    eos = ref0[1]
+    outs = {}
+    for overlap in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=3, max_len=64,
+                             paged=True, page_size=8, prefill_chunk=6,
+                             eos_id=eos, overlap=overlap)
+        results = engine.run([Request(uid=r.uid, prompt=r.prompt,
+                                      max_new_tokens=r.max_new_tokens)
+                              for r in reqs])
+        outs[overlap] = [(r.tokens, r.finish_reason) for r in results]
+        assert engine._pending is None
+        assert engine.allocator.n_free == engine.allocator.capacity
+    assert outs[True] == outs[False]
+    assert any(fr == "eos" for _, fr in outs[True]), \
+        "trace must include a finish while the next step is dispatched"
+
+
+def test_overlap_interleaved_with_prefix_cache(setup):
+    """Overlap parity holds under randomized submit offsets with prefix
+    sharing and COW in play."""
+    cfg, params = setup
+    rng = np.random.default_rng(66)
+    reqs = _shared_prefix_requests(cfg, 7, seed=66)
+    submit_at = rng.integers(0, 20, len(reqs))
+    outs = {}
+    for overlap in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=3, max_len=64,
+                             paged=True, page_size=8, prefill_chunk=6,
+                             prefix_cache=True, overlap=overlap)
+        order = sorted(range(len(reqs)), key=lambda i: submit_at[i])
+        i = step = 0
+        while i < len(order) or engine._busy():
+            while i < len(order) and submit_at[order[i]] <= step:
+                r = reqs[order[i]]
+                engine.submit(Request(uid=r.uid, prompt=r.prompt,
+                                      max_new_tokens=r.max_new_tokens))
+                i += 1
+            engine.step()
+            step += 1
+            assert step < 5000
+        outs[overlap] = [engine.results[r.uid].tokens for r in reqs]
+        _assert_drained_leak_free(engine)
+    assert outs[True] == outs[False]
+
+
+def test_streaming_callbacks_and_iterator(setup):
+    """Tokens surface incrementally: on_token fires per token in order and
+    stream() yields the same sequence the final Result holds, with one
+    timestamp per token."""
+    cfg, params = setup
+    rng = np.random.default_rng(67)
+    prompt = rng.integers(0, 256, 8).astype(np.int32)
+    ref = _ref_greedy(cfg, params, prompt, 6)
+    seen: list[int] = []
+    engine = ServeEngine(cfg, params, max_slots=2, max_len=96)
+    streamed = list(engine.stream(
+        Request(uid=0, prompt=prompt, max_new_tokens=6,
+                on_token=lambda t, res: seen.append(t))))
+    res = engine.results[0]
+    assert streamed == seen == res.tokens == ref
+    assert len(res.token_ts) == len(res.tokens)
+    assert res.ttft_s is not None and res.ttft_s >= 0
+    assert res.token_ts == sorted(res.token_ts)
+
+
+def test_slo_accounting(setup):
+    """TTFT SLOs classify finished requests into met/missed goodput
+    buckets; requests without SLOs stay unclassified."""
+    cfg, params = setup
+    rng = np.random.default_rng(68)
+    prompt = rng.integers(0, 256, 6).astype(np.int32)
+    engine = ServeEngine(cfg, params, max_slots=3, max_len=96)
+    res = engine.run([
+        Request(uid=0, prompt=prompt, max_new_tokens=3, slo_ttft_ms=1e9),
+        Request(uid=1, prompt=prompt.copy(), max_new_tokens=3,
+                slo_ttft_ms=1e-6),
+        Request(uid=2, prompt=prompt.copy(), max_new_tokens=3),
+    ])
+    assert res[0].slo_met is True
+    assert res[1].slo_met is False
+    assert res[2].slo_met is None
+    assert engine.stats["slo_met"] == 1 and engine.stats["slo_missed"] == 1
+
+
 def test_on_device_sampling_temperature(setup):
     """temp > 0 samples on device (fused in the jitted step) and still
     respects budgets; temp == 0 rows stay greedy-deterministic."""
