@@ -51,7 +51,7 @@ def _requests(cfg, perm, n: int, seed: int = 0):
     return out
 
 
-def _train_bigram(cfg_train, seed: int = 0):
+def _train_bigram(cfg_train, seed: int = 0, steps: int = TRAIN_STEPS):
     """A few SGD steps on next = perm[current] -> confident logits."""
     import jax
     import jax.numpy as jnp
@@ -76,7 +76,7 @@ def _train_bigram(cfg_train, seed: int = 0):
         return jax.tree.map(
             lambda w, gw: w - TRAIN_LR * gw.astype(w.dtype), p, g), loss
 
-    for _ in range(TRAIN_STEPS):
+    for _ in range(steps):
         params, loss = step(params, batch())
     return params, perm, float(loss)
 

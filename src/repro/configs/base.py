@@ -160,6 +160,15 @@ class ModelConfig:
     sched_aging: int = 64
     preemption: bool = False
     overlap_decode: bool = False
+    # speculative decoding (repro.spec): ``draft_model`` names a registry
+    # arch whose (smaller) model proposes ``spec_k`` tokens per scheduler
+    # turn from its own dense cache; the serving model verifies all of
+    # them in one batched pass and commits a distribution-preserving
+    # prefix (exact greedy parity at temperature 0). Paged local
+    # all-full-attention configs only; "" disables. ``spec_k=0`` takes
+    # the engine default (4).
+    draft_model: str = ""
+    spec_k: int = 0
     # kernel selection flows through the backend registry
     # (repro.kernels.dispatch): "" keeps the pure-XLA paths (the only option
     # for training — kernel backends are forward/inference paths); "auto"
@@ -194,6 +203,12 @@ class ModelConfig:
                 "'priority'")
         if self.sched_aging < 0:
             raise ValueError("sched_aging must be >= 0")
+        if self.spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
+        if self.draft_model and not self.paged_kv:
+            raise ValueError("draft_model requires paged_kv=True: "
+                             "speculative rollback reclaims verifier pages "
+                             "through the block allocator")
         if self.preemption and not self.paged_kv:
             raise ValueError("preemption requires paged_kv=True: dense "
                              "slots hold no reclaimable blocks")

@@ -85,6 +85,26 @@ def main(argv=None):
                     help="double-buffer decode: dispatch step N+1 before "
                          "syncing step N's ids (token-identical; default: "
                          "cfg.overlap_decode)")
+    ap.add_argument("--draft-model", default=None,
+                    help="registry arch of a smaller draft model: enables "
+                         "speculative decoding (requires --paged and an "
+                         "all-full-attention config; --reduced applies to "
+                         "the draft too)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens proposed per speculative turn "
+                         "(default: cfg.spec_k, engine default 4)")
+    ap.add_argument("--n", type=int, default=1,
+                    help="parallel samples per request: fork the prefilled "
+                         "slot into n sequences sharing common KV pages "
+                         "copy-on-write (requires --paged)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling filter (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling filter (1.0 = disabled)")
+    ap.add_argument("--request-seeds", action="store_true",
+                    help="stamp Request.seed = uid on every request: each "
+                         "sampling stream becomes reproducible across runs "
+                         "and independent of batch composition")
     ap.add_argument("--priority", type=int, default=0,
                     help="priority class stamped on every synthetic "
                          "request (larger = more urgent)")
@@ -106,6 +126,15 @@ def main(argv=None):
     if quant_kw:
         cfg = cfg.replace(**quant_kw)
     params = model_init(jax.random.PRNGKey(args.seed), cfg)
+    draft_cfg = draft_params = None
+    if args.draft_model:
+        draft_cfg = get_arch(args.draft_model)
+        if args.reduced:
+            draft_cfg = reduced(draft_cfg)
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            draft_cfg = draft_cfg.replace(vocab_size=cfg.vocab_size)
+        draft_params = model_init(jax.random.PRNGKey(args.seed + 1),
+                                  draft_cfg)
     engine = ServeEngine(cfg, params, max_slots=args.slots,
                          max_len=args.max_len, seed=args.seed,
                          kernel_backend=args.kernel_backend,
@@ -115,7 +144,9 @@ def main(argv=None):
                          prefix_cache=args.prefix_cache,
                          prefix_lru=args.prefix_lru,
                          sched=args.sched, sched_aging=args.sched_aging,
-                         preemption=args.preemption, overlap=args.overlap)
+                         preemption=args.preemption, overlap=args.overlap,
+                         draft_model=draft_cfg, draft_params=draft_params,
+                         spec_k=args.spec_k)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -132,6 +163,8 @@ def main(argv=None):
         reqs.append(Request(uid=uid, prompt=prompt,
                             max_new_tokens=args.max_new,
                             temperature=args.temperature,
+                            top_k=args.top_k, top_p=args.top_p, n=args.n,
+                            seed=uid if args.request_seeds else None,
                             frames=frames, extra_embeds=extra,
                             priority=args.priority,
                             slo_ttft_ms=args.slo_ttft_ms,
@@ -141,6 +174,7 @@ def main(argv=None):
     results = engine.run(reqs)
     dt = time.time() - t0
     new_tokens = sum(len(r.tokens) for r in results)
+    new_tokens += sum(len(c.tokens) for r in results for c in r.children)
     print(json.dumps({
         "arch": cfg.name, "requests": len(results),
         "completed": sum(1 for r in results if r.finish_reason),
@@ -160,6 +194,14 @@ def main(argv=None):
         "sched": engine.scheduler.policy,
         "sched_skips": engine.stats["sched_skips"],
         "preemptions": engine.stats["preemptions"],
+        "spec_k": engine.spec_k if engine.draft is not None else None,
+        "spec_turns": engine.stats["spec_turns"],
+        "spec_accept_rate": (round(engine.stats["spec_accepted"]
+                                   / max(engine.stats["spec_proposed"], 1),
+                                   3)
+                             if engine.draft is not None else None),
+        "forks": engine.stats["forks"],
+        "fork_shared_blocks": engine.stats["fork_shared_blocks"],
         "ttft_p50_ms": _pct_ms([r.ttft_s for r in results], 50),
         "ttft_p99_ms": _pct_ms([r.ttft_s for r in results], 99),
         "goodput": (round(engine.stats["slo_met"]

@@ -1,7 +1,7 @@
 from repro.models import attention, cache, frontends, layers, moe, recurrent
 from repro.models.transformer import (decode_step, extend_step, forward, init,
-                                      lm_loss, logits_fn)
+                                      lm_loss, logits_fn, verify_step)
 
 __all__ = ["attention", "cache", "decode_step", "extend_step", "forward",
            "frontends", "init", "layers", "lm_loss", "logits_fn", "moe",
-           "recurrent"]
+           "recurrent", "verify_step"]

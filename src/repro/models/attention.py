@@ -399,6 +399,104 @@ def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
     return out, new_cache
 
 
+def attention_verify(p: Params, cfg: ModelConfig, x, cache: dict, *,
+                     pos, n_valid, active, block_tables, compute_dtype):
+    """Score T tokens per slot in ONE pass against the paged pools — the
+    verifier side of speculative decoding, and the fork re-decode.
+
+    x: (B, T, d) — slot b's tokens sit at absolute positions
+    ``pos[b] .. pos[b]+T-1``; only the first ``n_valid[b]`` are real (the
+    rest are padding whose writes drop and whose outputs are junk).
+    ``active`` ((B,) bool) gates whole slots exactly like decode. Paged
+    pools only: this is ``attention_extend``'s scatter/snapshot scheme
+    batched over slots, with per-slot masks replacing the traced scalars.
+    Rows past a slot's table (positions beyond ``P * page``) also drop, so
+    a speculative chunk near ``max_len`` cannot scribble out of range.
+    Returns (out (B, T, d), new_cache).
+    """
+    B, T = x.shape[:2]
+    hd, H, K = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["q_proj"]["kernel"].astype(compute_dtype)).reshape(B, T, K, G, hd)
+    k = (xc @ p["k_proj"]["kernel"].astype(compute_dtype)).reshape(B, T, K, hd)
+    v = (xc @ p["v_proj"]["kernel"].astype(compute_dtype)).reshape(B, T, K, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
+    if cfg.use_rope:
+        qf = rope(q.reshape(B, T, H, hd), positions, cfg.rope_theta)
+        q = qf.reshape(B, T, K, G, hd)
+        k = rope(k, positions, cfg.rope_theta)
+
+    pool_k, pool_v = cache["k"], cache["v"]
+    n_blocks, page = pool_k.shape[:2]
+    n_pages = block_tables.shape[1]
+    i = jnp.arange(T)[None, :]                                # (1, T)
+    valid_q = (i < n_valid[:, None]) & (positions < n_pages * page)
+    if active is not None:
+        valid_q &= active[:, None]
+    pg = jnp.clip(positions // page, 0, n_pages - 1)
+    blk = jnp.take_along_axis(block_tables, pg, axis=1)       # (B, T)
+    blk_w = jnp.where(valid_q, blk, n_blocks)                 # pads dropped
+    rows = positions % page
+    if "k_scale" in cache:
+        from repro.quant import dequantize_kv, quantize_kv
+        kq, ksc = quantize_kv(k, str(cfg.kv_dtype))   # (B,T,K,hd), (B,T,K)
+        vq, vsc = quantize_kv(v, str(cfg.kv_dtype))
+        new_cache = {
+            "k": pool_k.at[blk_w, rows].set(kq.astype(pool_k.dtype),
+                                            mode="drop"),
+            "v": pool_v.at[blk_w, rows].set(vq.astype(pool_v.dtype),
+                                            mode="drop"),
+            "k_scale": cache["k_scale"].at[blk_w, rows].set(
+                ksc.astype(cache["k_scale"].dtype), mode="drop"),
+            "v_scale": cache["v_scale"].at[blk_w, rows].set(
+                vsc.astype(cache["v_scale"].dtype), mode="drop"),
+        }
+        k_old = dequantize_kv(pool_k[block_tables],
+                              cache["k_scale"][block_tables],
+                              compute_dtype).reshape(B, n_pages * page, K, hd)
+        v_old = dequantize_kv(pool_v[block_tables],
+                              cache["v_scale"][block_tables],
+                              compute_dtype).reshape(B, n_pages * page, K, hd)
+    else:
+        new_cache = {
+            "k": pool_k.at[blk_w, rows].set(k.astype(pool_k.dtype),
+                                            mode="drop"),
+            "v": pool_v.at[blk_w, rows].set(v.astype(pool_v.dtype),
+                                            mode="drop"),
+        }
+        k_old = pool_k[block_tables].reshape(B, n_pages * page, K, hd)
+        v_old = pool_v[block_tables].reshape(B, n_pages * page, K, hd)
+    old_pos = jnp.arange(n_pages * page)
+
+    # per-slot masks: snapshot rows strictly below the slot's own pos (the
+    # prefix-shared head is readable from 0, as in extend), intra-chunk
+    # causal over the new keys with the ragged tail masked out
+    mask_old = jnp.broadcast_to(
+        (old_pos[None, None, :] < pos[:, None, None]),
+        (B, T, old_pos.shape[0]))
+    j = jnp.arange(T)
+    mask_new = ((j[None, None, :] <= j[None, :, None])
+                & (j[None, None, :] < n_valid[:, None, None]))
+    s_old = jnp.einsum("btkgd,bskd->bkgts", q, k_old.astype(compute_dtype),
+                       preferred_element_type=jnp.float32) * _scale(cfg)
+    s_new = jnp.einsum("btkgd,bskd->bkgts", q, k.astype(compute_dtype),
+                       preferred_element_type=jnp.float32) * _scale(cfg)
+    s = softcap(jnp.concatenate([s_old, s_new], axis=-1), cfg.attn_softcap)
+    mask = jnp.concatenate([mask_old, mask_new], axis=-1)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    vv = jnp.concatenate([v_old, v], axis=1).astype(compute_dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", w.astype(compute_dtype), vv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, T, H * hd).astype(compute_dtype)
+    out = (out @ p["o_proj"]["kernel"].astype(compute_dtype)).astype(x.dtype)
+    return out, new_cache
+
+
 def attention_extend(p: Params, cfg: ModelConfig, x, cache: dict, *,
                      is_local: bool, pos, n_valid, slot, compute_dtype,
                      block_tables=None, first_new_pos=0):

@@ -143,7 +143,9 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
                  part=None, active=None, block_tables=None, slot=None,
                  n_valid=None, first_new_pos=0):
     """mode: 'full' (train/prefill, builds cache) | 'decode' (single step)
-    | 'extend' (chunked prefill: T tokens for ONE slot of the pooled cache).
+    | 'extend' (chunked prefill: T tokens for ONE slot of the pooled cache)
+    | 'verify' (speculative decoding: T tokens for EVERY slot, per-slot
+    ``pos``/``n_valid`` arrays, paged full-attention layers only).
 
     Decode extras: ``active`` ((B,) bool) gates per-slot cache writes;
     ``block_tables`` ((B, P) int32) selects the paged KV layout for full-
@@ -170,6 +172,17 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
                 n_valid=n_valid, slot=slot, compute_dtype=compute_dtype,
                 block_tables=bt, first_new_pos=first_new_pos)
             new_cache["self"] = new_self
+        elif mode == "verify":
+            if bt is None:
+                raise NotImplementedError(
+                    "verify_step requires the paged layout on every "
+                    "attention layer (speculative decoding is gated on "
+                    "paged all-full-attention configs)")
+            out, new_self = attn_mod.attention_verify(
+                lp["attn"], cfg, h, cache["self"], pos=pos, n_valid=n_valid,
+                active=active, block_tables=bt,
+                compute_dtype=compute_dtype)
+            new_cache["self"] = new_self
         else:
             out, new_self = attn_mod.attention_decode(
                 lp["attn"], cfg, h, cache["self"], is_local=is_local, pos=pos,
@@ -177,6 +190,10 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
                 block_tables=bt)
             new_cache["self"] = new_self
     elif spec.mixer in ("rglru", "mamba"):
+        if mode == "verify":
+            raise NotImplementedError(
+                "verify_step does not support recurrent mixers: speculative "
+                "rollback cannot rewind a per-slot carry")
         fwd = rec_mod.rglru_forward if spec.mixer == "rglru" else rec_mod.mamba_forward
         key = spec.mixer
         if mode == "extend":
@@ -209,10 +226,11 @@ def _apply_layer(lp: Params, spec: LayerSpec, cfg: ModelConfig, x, *,
 
     # cross attention (decoder of enc-dec); enc_out: (B, S_enc, d) or KV cache
     if cfg.encoder is not None and spec.mixer in ("full", "local"):
-        if mode == "extend":
+        if mode in ("extend", "verify"):
             raise NotImplementedError(
-                "chunked prefill (extend_step) does not support enc-dec "
-                "models — the serve engine prefills those whole")
+                "chunked prefill (extend_step) and speculative verification "
+                "(verify_step) do not support enc-dec models — the serve "
+                "engine prefills those whole and decodes them one-by-one")
         h = apply_norm(lp["cross_norm"], x, cfg.norm, cfg.norm_eps)
         if mode == "full":
             out, (ck, cv) = attn_mod.attention_forward(
@@ -532,6 +550,43 @@ def _extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
                                     first_new_pos=first_new_pos)
     h_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, 1)
     logits = logits_fn(params, cfg, h_last, None)[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+def verify_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, *,
+                active=None, block_tables=None):
+    """Speculative-verification step: score T tokens for EVERY slot in one
+    pass. tokens: (B, T) int32 — slot b's rows sit at absolute positions
+    ``pos[b] .. pos[b]+T-1``; ``n_valid`` ((B,) int32) marks each slot's
+    ragged tail (padded rows write nothing); ``active`` ((B,) bool) gates
+    whole slots exactly like ``decode_step``. Paged all-full-attention
+    configs only (the serve engine gates speculation on the same predicate
+    as the prefix cache). T is static, so one compiled shape serves every
+    scheduler turn at a given ``spec_k``.
+
+    Returns (logits (B, T, V) — row t scores position ``pos+t``'s NEXT
+    token — and the new cache with all T KV rows written; the engine rolls
+    uncommitted rows back by never advancing ``slot_pos`` past the accepted
+    prefix, and releasing any speculative pages through the allocator).
+    """
+    with _model_kernel_scope(cfg, None):
+        return _verify_step(params, cfg, cache, tokens, pos, n_valid,
+                            active=active, block_tables=block_tables)
+
+
+def _verify_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, *,
+                 active=None, block_tables=None):
+    x = embed_tokens(params, cfg, tokens)
+    B, T = tokens.shape
+    if cfg.learned_pos and "pos_embed" in params:
+        positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        x = x + params["pos_embed"]["table"][positions].astype(x.dtype)
+    x, new_cache, _ = _apply_layers(params, cfg, x, positions=None,
+                                    enc_out=None, cache=cache, pos=pos,
+                                    mode="verify", part=None, active=active,
+                                    block_tables=block_tables,
+                                    n_valid=n_valid)
+    logits = logits_fn(params, cfg, x, None)[..., :cfg.vocab_size]
     return logits, new_cache
 
 

@@ -74,12 +74,18 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import dispatch as kdispatch
-from repro.models import decode_step, extend_step, forward, logits_fn
+from repro.models import decode_step, extend_step, forward, logits_fn, \
+    verify_step
 from repro.models.cache import copy_block, default_n_blocks, init_cache, \
     kv_bytes, n_blocks_for_bytes, pages_per_slot
 from repro.quant import is_quant_dtype, quantize_params
 from repro.serve.prefix import PrefixIndex, page_hashes
 from repro.serve.scheduler import Scheduler
+from repro.spec import DraftWorker, sample_tokens, speculative_accept
+from repro.spec.sampling import (P_ACCEPT as _P_ACCEPT,
+                                 P_FORK as _P_FORK,
+                                 P_SAMPLE as _P_SAMPLE,
+                                 fold_keys as _fold_keys)
 
 PyTree = Any
 
@@ -93,6 +99,15 @@ class Request:
     prompt: np.ndarray                      # (S,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0                # 0 => greedy
+    top_k: int = 0                          # 0 => no top-k filter
+    top_p: float = 1.0                      # >= 1 => no nucleus filter
+    #: parallel sampling: fork the prefilled slot into n sequences that
+    #: share all common KV pages copy-on-write (paged all-full configs);
+    #: children land on ``Result.children``
+    n: int = 1
+    #: per-request PRNG seed: the sampling stream depends only on
+    #: (seed, step) — not on pool co-residents or admission order
+    seed: int | None = None
     frames: np.ndarray | None = None        # enc-dec (audio) models
     extra_embeds: np.ndarray | None = None  # vlm models
     # scheduling (repro.serve.scheduler)
@@ -117,6 +132,9 @@ class Result:
     token_ts: list[float] = field(default_factory=list)  # one per token
     preempted: int = 0                      # times evicted and requeued
     slo_met: bool | None = None             # None = request had no SLO
+    #: parallel sampling (``Request.n > 1``): one Result per forked child,
+    #: in fork order — the parent's own tokens stay on this Result
+    children: list["Result"] = field(default_factory=list)
 
     @property
     def ttft_s(self) -> float | None:
@@ -253,13 +271,11 @@ class BlockAllocator:
             self.decref(blk, retain=retain)
 
 
-def _sample(logits, temps, key):
-    """Greedy rows where temp <= 0, temperature-categorical otherwise.
-    Runs inside the jitted step: only sampled ids reach the host."""
-    greedy = jnp.argmax(logits, axis=-1)
-    t = jnp.where(temps <= 0, 1.0, temps)[:, None]
-    sampled = jax.random.categorical(key, logits / t, axis=-1)
-    return jnp.where(temps <= 0, greedy, sampled).astype(jnp.int32)
+def _sample(logits, temps, top_k, top_p, keys):
+    """Fused on-device sampler: greedy rows where temp <= 0, top-k/top-p
+    filtered temperature sampling otherwise, one PRNG key per row. Runs
+    inside the jitted step: only sampled ids reach the host."""
+    return sample_tokens(logits, temps, top_k, top_p, keys)
 
 
 @dataclass
@@ -283,7 +299,10 @@ class ServeEngine:
                  sched: str | None = None,
                  sched_aging: int | None = None,
                  preemption: bool | None = None,
-                 overlap: bool | None = None):
+                 overlap: bool | None = None,
+                 draft_model: "ModelConfig | str | None" = None,
+                 draft_params: PyTree | None = None,
+                 spec_k: int | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
@@ -351,7 +370,36 @@ class ServeEngine:
         self._kernel_blocks = (kdispatch.blocks_from_pairs(strat.kernel_blocks)
                                if strat is not None and strat.kernel_blocks
                                else None)
-        self.rng = jax.random.PRNGKey(seed)
+        #: engine-level base key: per-request streams are derived from it
+        #: by folding the request uid (or replaced by ``Request.seed``)
+        self._base_key = np.asarray(jax.random.PRNGKey(seed), np.uint32)
+        # speculative decoding: a small draft model proposes spec_k tokens
+        # per turn; the verifier scores all of them plus one bonus position
+        # in a single batched verify_step pass (see repro.spec)
+        dm = draft_model if draft_model is not None else (
+            cfg.draft_model or None)
+        if isinstance(dm, str):
+            from repro.configs import get_arch
+            dm = get_arch(dm)
+        self.spec_k = int(cfg.spec_k if spec_k is None else spec_k)
+        self._draft_cfg = dm
+        self.draft = None
+        if dm is not None:
+            if not self.prefix_capable:
+                raise ValueError(
+                    "speculative decoding requires the paged local "
+                    "all-full-attention path: verify_step rolls uncommitted "
+                    "rows back through the block allocator")
+            if self.overlap:
+                raise ValueError(
+                    "speculative decoding and overlap_decode are exclusive: "
+                    "the spec turn already overlaps draft and verifier work")
+            if dm.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    "draft model must share the verifier's vocabulary: "
+                    f"{dm.vocab_size} != {cfg.vocab_size}")
+            if self.spec_k < 1:
+                self.spec_k = 4
         if self.paged:
             if kv_budget_bytes is not None:
                 # size the pool by HBM budget through the cache's sizing
@@ -419,6 +467,24 @@ class ServeEngine:
         #: ``slot_budget`` is decremented at dispatch and runs one
         #: speculative step ahead of the synced token list
         self._slot_tok0 = np.zeros(max_slots, np.int64)
+        # per-request sampling state: top-k/top-p knobs, PRNG base key and
+        # dispatch counter (the in-jit key is fold(base, ctr, purpose))
+        self.slot_topk = np.zeros(max_slots, np.int32)
+        self.slot_topp = np.ones(max_slots, np.float32)
+        self._slot_key = np.zeros((max_slots, 2), np.uint32)
+        self._slot_ctr = np.zeros(max_slots, np.int64)
+        #: token fed on a slot's first decode when nothing was emitted yet
+        #: (fork children re-decode the prompt's last row to diverge)
+        self._slot_feed = np.zeros(max_slots, np.int32)
+        #: fork-family membership: parents with reserved children and the
+        #: children themselves are never preemption victims (their shared
+        #: refcounts would outlive the eviction)
+        self._slot_fork = np.zeros(max_slots, bool)
+        self._slot_children: dict[int, list[int]] = {}
+        #: pages granted at admission — speculative extras roll back to this
+        self._slot_base_pages = np.zeros(max_slots, np.int64)
+        self._slot_first = np.zeros(max_slots, np.int32)
+        self._next_child_uid = -2
         self._admit_seq = 0
         self._pending: _Pending | None = None
         self.results: dict[int, Result] = {}
@@ -436,7 +502,17 @@ class ServeEngine:
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "prefix_cow": 0, "prefix_evictions": 0,
                       "preemptions": 0, "sched_skips": 0,
-                      "slo_met": 0, "slo_missed": 0}
+                      "slo_met": 0, "slo_missed": 0,
+                      "spec_turns": 0, "spec_proposed": 0,
+                      "spec_accepted": 0, "spec_extra_blocks": 0,
+                      "forks": 0, "fork_shared_blocks": 0,
+                      "fork_fresh_blocks": 0}
+        if self._draft_cfg is not None:
+            self.draft = DraftWorker(
+                self._draft_cfg, draft_params, max_slots=max_slots,
+                max_len=max_len, k=self.spec_k,
+                prefill_chunk=self.prefill_chunk, seed=seed + 1)
+            self._spec_fn = jax.jit(self._spec_verify, donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     @property
@@ -465,15 +541,16 @@ class ServeEngine:
 
     # ---- jitted graphs ------------------------------------------------
     def _decode_all(self, params, cache, tokens, pos, active, tables, temps,
-                    key):
+                    topk, topp, keys, ctrs):
         """One decode step over the whole slot pool + fused sampling."""
         logits, cache = decode_step(params, self.cfg, cache, tokens, pos,
                                     part=self.part, active=active,
                                     block_tables=tables)
-        return _sample(logits[:, 0], temps, key), cache
+        kk = _fold_keys(keys, ctrs, _P_SAMPLE)
+        return _sample(logits[:, 0], temps, topk, topp, kk), cache
 
     def _chunk_step(self, params, cache, tokens, pos, n_valid, slot, tables,
-                    temp, key, first_new):
+                    temp, topk, topp, key, ctr, first_new):
         """One chunked-prefill step for one slot + fused sampling (the
         sampled id only matters on the final chunk). ``first_new`` (traced
         scalar) is the absolute position prefill started at — positions
@@ -481,7 +558,27 @@ class ServeEngine:
         logits, cache = extend_step(params, self.cfg, cache, tokens, pos,
                                     n_valid, slot, block_tables=tables,
                                     first_new_pos=first_new)
-        return _sample(logits[:, 0], temp[None], key), cache
+        kk = _fold_keys(key[None], ctr[None], _P_SAMPLE)
+        return _sample(logits[:, 0], temp[None], topk[None], topp[None],
+                       kk), cache
+
+    def _spec_verify(self, params, cache, feed, draft_toks, draft_probs,
+                     pos, n_valid, active, tables, temps, topk, topp, keys,
+                     ctrs):
+        """One speculative verify turn, fully in-jit: score the last
+        committed token plus the k draft proposals in a single batched
+        ``verify_step`` pass, then run the distribution-preserving
+        acceptance rule. Returns (out_tokens (B, k+1), n_accept (B), cache);
+        only the committed prefix of ``out_tokens`` reaches the results."""
+        toks = jnp.concatenate([feed, draft_toks], axis=1)
+        logits, cache = verify_step(params, self.cfg, cache, toks, pos,
+                                    n_valid, active=active,
+                                    block_tables=tables)
+        kk = _fold_keys(keys, ctrs, _P_ACCEPT)
+        out, n_acc = speculative_accept(logits, draft_toks, draft_probs,
+                                        temps, topk, topp, kk,
+                                        n_draft=n_valid - 1)
+        return out, n_acc, cache
 
     def _commit_slot(self, cache, slot_cache, slot, tables):
         """Write a batch-1 dense prefill cache into slot ``slot`` of the
@@ -587,8 +684,9 @@ class ServeEngine:
         jitted page copy, table remap). Admission already privatizes the one
         boundary page a prefix hit can write, so this keeps 'writers never
         touch shared blocks' true by construction rather than by scheduling
-        luck."""
-        if not self.paged or self.prefix_index is None or hi <= lo:
+        luck. Fork children lean on the same guard: their shared prompt
+        pages carry refcount > 1 whether or not a prefix index exists."""
+        if not self.paged or hi <= lo:
             return
         page = self.page_size
         for p in range(lo // page, (hi - 1) // page + 1):
@@ -596,7 +694,8 @@ class ServeEngine:
             if blk == 0:
                 continue
             if (self.allocator.ref[blk] > 1
-                    or self.prefix_index.is_cached(blk)):
+                    or (self.prefix_index is not None
+                        and self.prefix_index.is_cached(blk))):
                 [dst] = self.allocator.alloc(1)
                 self.cache = self._copy_fn(self.cache, np.int32(blk),
                                            np.int32(dst))
@@ -624,6 +723,7 @@ class ServeEngine:
             return True
         cands = [s for s in range(self.max_slots)
                  if self.phase[s] != FREE and not self._slot_legacy[s]
+                 and not self._slot_fork[s]
                  and self._slot_prio[s] < prio]
         if not cands:
             return False
@@ -678,6 +778,8 @@ class ServeEngine:
         self.phase[slot] = FREE
         self.slot_uid[slot] = -1
         self._slot_req[slot] = None
+        if self.draft is not None:
+            self.draft.drop(slot)
         res.preempted += 1
         self.stats["preemptions"] += 1
         self.scheduler.requeue(
@@ -728,6 +830,17 @@ class ServeEngine:
                 self._reject(req, "quantized KV serves chunked-prefill "
                                   "requests only (no frames/embeds)")
                 continue
+            n_par = max(1, int(req.n))
+            if n_par > 1 and (legacy or not self.prefix_capable):
+                self.scheduler.remove(entry)
+                self._reject(req, "parallel sampling (n > 1) requires the "
+                                  "paged local all-full-attention path")
+                continue
+            if n_par > self.max_slots:
+                self.scheduler.remove(entry)
+                self._reject(req, f"n {n_par} exceeds max_slots "
+                                  f"{self.max_slots}")
+                continue
             if self.paged:
                 total = self.allocator.pages_for(n_tokens)
                 if total > self.allocator.capacity:
@@ -745,6 +858,14 @@ class ServeEngine:
                 if self._preempt_for(int(req.priority)):
                     return True              # resources moved: re-plan
                 return False                 # every slot busy: nobody admits
+            if n_par > 1 and int((self.phase == FREE).sum()) < n_par:
+                # the whole fan-out needs slots up front (children are
+                # reserved at admission); no preemption to make room —
+                # fan-outs wait rather than evict
+                self.scheduler.note_skip(entry)
+                if fcfs or self.scheduler.reserved(entry):
+                    return False
+                continue
             if self.paged:
                 if not self._admit_paged(entry, slot, n_tokens, legacy):
                     if fcfs or self.scheduler.reserved(entry):
@@ -827,11 +948,23 @@ class ServeEngine:
             self.stats["prefix_hit_tokens"] += first_new
         return True
 
+    def _request_key(self, req: Request) -> np.ndarray:
+        """Per-request PRNG base key: ``Request.seed`` when given (exact
+        replay across runs), else derived from the engine seed and the uid
+        — either way independent of admission order and co-residents."""
+        if req.seed is not None:
+            return np.asarray(jax.random.PRNGKey(int(req.seed)), np.uint32)
+        return np.asarray(
+            jax.random.fold_in(jnp.asarray(self._base_key),
+                               np.uint32(req.uid & 0xFFFFFFFF)), np.uint32)
+
     def _place(self, entry, slot: int, legacy: bool) -> None:
         """Bind an admitted request to its slot and start prefill."""
         req = entry.req
-        self.scheduler.note_admitted(entry,
-                                     len(req.prompt) + req.max_new_tokens)
+        # fan-outs charge their full decode cost: n sequences each draw up
+        # to max_new_tokens against the user's service accumulator
+        self.scheduler.note_admitted(
+            entry, len(req.prompt) + max(1, int(req.n)) * req.max_new_tokens)
         self._admit_hashes.pop(req.uid, None)
         self._t0[slot] = time.perf_counter()
         self.slot_uid[slot] = req.uid
@@ -845,6 +978,15 @@ class ServeEngine:
         self._slot_tok0[slot] = len(self.results[req.uid].tokens)
         self._admit_seq += 1
         self.stats["prefills"] += 1
+        self.slot_topk[slot] = max(0, int(req.top_k))
+        self.slot_topp[slot] = float(req.top_p)
+        self._slot_key[slot] = self._request_key(req)
+        self._slot_ctr[slot] = len(self.results[req.uid].tokens)
+        self._slot_feed[slot] = int(req.prompt[-1]) if len(req.prompt) else 0
+        self._slot_base_pages[slot] = (len(self.slot_blocks[slot])
+                                       if self.paged else 0)
+        if self.draft is not None and not legacy:
+            self.draft.begin(slot)
         if legacy:
             self._prefill_whole(slot, req)
         else:
@@ -853,6 +995,98 @@ class ServeEngine:
             # chunked prefill starts at the first non-cached token:
             # everything below rode in read-only through the table
             self._prefill_off[slot] = self._first_new[slot]
+            if int(req.n) > 1:
+                # the parent's phase is set: reservation sees it as busy
+                self._reserve_children(slot, entry)
+
+    def _reserve_children(self, slot: int, entry) -> None:
+        """Reserve one free slot per extra sample of a ``Request(n > 1)``.
+        Reserved slots sit inert (phase PREFILL, zero budget, not in
+        ``_prefilling``) until the parent's prefill completes and
+        ``_fork_children`` maps the shared pages; the whole family is
+        preemption-exempt so the shared refcounts cannot outlive a victim."""
+        req = entry.req
+        res = self.results[req.uid]
+        kids: list[int] = []
+        for i in range(int(req.n) - 1):
+            cs = self._free_slot()    # guaranteed by the admission count
+            cuid = self._next_child_uid
+            self._next_child_uid -= 1
+            cres = Result(uid=cuid, submit_s=res.submit_s)
+            res.children.append(cres)
+            self.results[cuid] = cres
+            self.phase[cs] = PREFILL
+            self.slot_uid[cs] = cuid
+            self.slot_temp[cs] = req.temperature
+            self.slot_budget[cs] = 0
+            self.slot_topk[cs] = max(0, int(req.top_k))
+            self.slot_topp[cs] = float(req.top_p)
+            self._slot_req[cs] = dc_replace(req, uid=cuid, n=1)
+            self._slot_legacy[cs] = False
+            self._slot_prio[cs] = req.priority
+            self._slot_seq[cs] = self._admit_seq
+            self._slot_sched_seq[cs] = entry.seq
+            self._slot_tok0[cs] = 0
+            self._slot_fork[cs] = True
+            # child streams branch off the parent key through a fork tag:
+            # child i is reproducible given (request seed, i)
+            self._slot_key[cs] = np.asarray(jax.random.fold_in(
+                jax.random.fold_in(jnp.asarray(self._slot_key[slot]),
+                                   np.uint32(_P_FORK)),
+                np.uint32(i + 1)), np.uint32)
+            self._slot_ctr[cs] = 0
+            kids.append(cs)
+        self._slot_fork[slot] = True
+        self._slot_children[slot] = kids
+
+    def _fork_children(self, parent: int, req: Request) -> None:
+        """COW-fork a prefilled parent into its reserved children. Shared
+        prompt pages map read-only into each child's table (refcount++);
+        the boundary page holding the prompt's last row is privatized per
+        child, because the child re-decodes that row to sample its own
+        first token; fresh pages back each child's future tail. A child
+        whose fresh grant cannot be allocated rejects gracefully — the
+        parent and remaining children keep going."""
+        P = len(req.prompt)
+        kids = self._slot_children.pop(parent, [])
+        pblocks = self.slot_blocks[parent]
+        w0 = (P - 1) // self.page_size      # page the child rewrites
+        total = self.allocator.pages_for(P + req.max_new_tokens)
+        for cs in kids:
+            child_req = self._slot_req[cs]
+            try:
+                fresh = self.allocator.alloc(total - w0)
+            except RuntimeError:
+                self._reject(child_req, "fork: block pool exhausted")
+                self.phase[cs] = FREE
+                self.slot_uid[cs] = -1
+                self._slot_req[cs] = None
+                self._slot_fork[cs] = False
+                continue
+            for blk in pblocks[:w0]:
+                self.allocator.incref(blk)
+            # private copy of the boundary page: it holds committed rows
+            # below P-1 that the family shares but this child must own
+            self.cache = self._copy_fn(self.cache, np.int32(pblocks[w0]),
+                                       np.int32(fresh[0]))
+            blocks = list(pblocks[:w0]) + fresh
+            self.slot_blocks[cs] = blocks
+            self.block_tables[cs, :] = 0
+            self.block_tables[cs, :len(blocks)] = blocks
+            self.phase[cs] = DECODE
+            self.slot_pos[cs] = P - 1
+            self.slot_budget[cs] = req.max_new_tokens
+            self._slot_feed[cs] = int(req.prompt[-1])
+            self._slot_base_pages[cs] = len(blocks)
+            self._prefill_off[cs] = 0
+            self._first_new[cs] = 0
+            self._t0[cs] = self._t0[parent]
+            if self.draft is not None and self.draft.off[parent] >= 0:
+                self.draft.fork_slot(parent, cs)
+            self.stats["forks"] += 1
+            self.stats["fork_shared_blocks"] += w0
+            self.stats["fork_fresh_blocks"] += len(fresh)
+            self.stats["kv_bytes_alloc"] += len(fresh) * self._block_kv_bytes
 
     def _prefill_whole(self, slot: int, req: Request):
         prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
@@ -868,9 +1102,16 @@ class ServeEngine:
                                     frames, extra)
         self.cache = self._commit_fn(self.cache, slot_cache, np.int32(slot),
                                      self._tables())
-        self.rng, k = jax.random.split(self.rng)
-        first = int(_sample(logits, jnp.asarray([req.temperature],
-                                                jnp.float32), k)[0])
+        kk = _fold_keys(
+            jnp.asarray(self._slot_key[slot][None]),
+            jnp.asarray([self._slot_ctr[slot] & 0x7FFFFFFF], jnp.uint32),
+            _P_SAMPLE)
+        first = int(_sample(logits,
+                            jnp.asarray([req.temperature], jnp.float32),
+                            jnp.asarray(self.slot_topk[slot][None]),
+                            jnp.asarray(self.slot_topp[slot][None]),
+                            kk)[0])
+        self._slot_ctr[slot] += 1
         self.phase[slot] = DECODE
         self._finish_prefill(slot, first, length)
 
@@ -882,37 +1123,57 @@ class ServeEngine:
         for slot in sorted(self._prefilling):
             req = self._prefilling[slot]
             prompt = np.asarray(req.prompt, np.int32)
+            if (self.draft is not None and self.draft.off[slot] >= 0
+                    and not self.draft.ready(slot, len(prompt))):
+                # the draft prefills its own dense cache in lockstep —
+                # always from 0: prefix hits are a verifier-pool concept
+                self.draft.prefill_chunk(slot, prompt)
             off = int(self._prefill_off[slot])
-            t = min(self.prefill_chunk, len(prompt) - off)
-            buf = np.zeros((1, self.prefill_chunk), np.int32)
-            buf[0, :t] = prompt[off:off + t]
-            self.rng, k = jax.random.split(self.rng)
-            fn = self._ensure_chunk_fn()
-            self._cow_pages(slot, off, off + t)
-            with self._kernel_scope():
-                tok, self.cache = fn(self.params, self.cache,
-                                     jnp.asarray(buf), np.int32(off),
-                                     np.int32(t), np.int32(slot),
-                                     self._tables(),
-                                     np.float32(req.temperature), k,
-                                     np.int32(self._first_new[slot]))
-            self.stats["prefill_chunks"] += 1
-            off += t
-            self._prefill_off[slot] = off
-            if off >= len(prompt):
-                del self._prefilling[slot]
-                if self.prefix_index is not None:
-                    # every full prompt page is now written: publish the
-                    # slot's pages so later identical prefixes can share
-                    # them (matched pages re-register as a no-op; cold
-                    # concurrent duplicates stay un-indexed and free
-                    # normally at finish)
-                    n_full = len(prompt) // self.page_size
-                    if n_full:
-                        self.prefix_index.publish(
-                            prompt, self.slot_blocks[slot][:n_full])
-                self.phase[slot] = DECODE
-                self._finish_prefill(slot, int(tok[0]), len(prompt))
+            if off < len(prompt):
+                t = min(self.prefill_chunk, len(prompt) - off)
+                buf = np.zeros((1, self.prefill_chunk), np.int32)
+                buf[0, :t] = prompt[off:off + t]
+                fn = self._ensure_chunk_fn()
+                self._cow_pages(slot, off, off + t)
+                with self._kernel_scope():
+                    tok, self.cache = fn(
+                        self.params, self.cache, jnp.asarray(buf),
+                        np.int32(off), np.int32(t), np.int32(slot),
+                        self._tables(), np.float32(req.temperature),
+                        np.int32(self.slot_topk[slot]),
+                        np.float32(self.slot_topp[slot]),
+                        jnp.asarray(self._slot_key[slot]),
+                        np.uint32(self._slot_ctr[slot] & 0x7FFFFFFF),
+                        np.int32(self._first_new[slot]))
+                self._slot_ctr[slot] += 1
+                self.stats["prefill_chunks"] += 1
+                off += t
+                self._prefill_off[slot] = off
+                if off >= len(prompt):
+                    self._slot_first[slot] = int(tok[0])
+            if off < len(prompt):
+                continue
+            if (self.draft is not None and self.draft.off[slot] >= 0
+                    and not self.draft.ready(slot, len(prompt))):
+                continue        # verifier done; draft still catching up
+            del self._prefilling[slot]
+            if self.prefix_index is not None:
+                # every full prompt page is now written: publish the
+                # slot's pages so later identical prefixes can share
+                # them (matched pages re-register as a no-op; cold
+                # concurrent duplicates stay un-indexed and free
+                # normally at finish)
+                n_full = len(prompt) // self.page_size
+                if n_full:
+                    self.prefix_index.publish(
+                        prompt, self.slot_blocks[slot][:n_full])
+            self.phase[slot] = DECODE
+            if self._slot_children.get(slot):
+                # fork before the parent can finish: children must map the
+                # prompt pages while they are all still resident
+                self._fork_children(slot, req)
+            self._finish_prefill(slot, int(self._slot_first[slot]),
+                                 len(prompt))
 
     def _emitted(self, slot: int) -> int:
         """Tokens emitted in this admission segment (synced to host)."""
@@ -950,6 +1211,12 @@ class ServeEngine:
         self.slot_uid[slot] = -1
         self._slot_req[slot] = None
         self._prefilling.pop(slot, None)
+        if self.draft is not None:
+            self.draft.drop(slot)
+        self._slot_fork[slot] = False
+        # reserved-but-never-forked children (parent truncated mid-prefill)
+        # hold no blocks and finish independently through the drain loop
+        self._slot_children.pop(slot, None)
         if self.paged and self.slot_blocks[slot]:
             # drop this slot's references immediately: unshared blocks are
             # admittable this very step, and fully-written prompt pages
@@ -961,6 +1228,137 @@ class ServeEngine:
             self.slot_blocks[slot] = []
             self.block_tables[slot, :] = 0
 
+    # ---- speculative decoding ------------------------------------------
+    def _committed_tok(self, slot: int, p: int) -> int:
+        """Token at absolute position ``p`` of the slot's committed stream:
+        the prompt, then this segment's emitted tokens (a resumption folds
+        earlier generations into the prompt, so the formula holds across
+        preemptions; fork children start with an empty segment)."""
+        req = self._slot_req[slot]
+        if p < len(req.prompt):
+            return int(req.prompt[p])
+        res = self.results[self.slot_uid[slot]]
+        return int(res.tokens[int(self._slot_tok0[slot])
+                              + (p - len(req.prompt))])
+
+    def _rollback_spec(self, slot: int) -> None:
+        """Roll the slot's speculative pages back through the allocator:
+        release every page beyond what the committed stream needs (never
+        below the admission grant — those pages are the request's own)."""
+        keep = max(int(self._slot_base_pages[slot]),
+                   self.allocator.pages_for(int(self.slot_pos[slot]) + 1))
+        while len(self.slot_blocks[slot]) > keep:
+            blk = self.slot_blocks[slot].pop()
+            self.block_tables[slot, len(self.slot_blocks[slot])] = 0
+            self.allocator.release([blk])
+
+    def _spec_turn(self) -> np.ndarray | None:
+        """One speculative draft-verify turn over every eligible DECODE
+        slot. The draft proposes up to ``spec_k`` tokens per slot from its
+        dense cache; the verifier scores the last committed token plus all
+        proposals in one batched ``verify_step``; the acceptance rule
+        commits a distribution-preserving prefix (plus one bonus/residual
+        token); uncommitted verifier rows roll back through the block
+        allocator. Returns the mask of slots handled here so the plain
+        decode path skips them, or None when no slot was eligible."""
+        k = self.spec_k
+        mask = np.zeros(self.max_slots, bool)
+        k_eff = np.zeros(self.max_slots, np.int32)
+        feed0 = np.zeros((self.max_slots, 1), np.int32)
+        feed1 = np.zeros((self.max_slots, 1), np.int32)
+        for slot in range(self.max_slots):
+            if (self.phase[slot] != DECODE or self.slot_budget[slot] <= 0
+                    or self._slot_legacy[slot]
+                    or self.draft.off[slot] < 0):
+                continue
+            req = self._slot_req[slot]
+            pos0 = int(self.slot_pos[slot])
+            if pos0 < 1 or not self.draft.ready(slot, len(req.prompt)):
+                continue    # fall back to plain decode this turn
+            ke = min(k, self.max_len - 1 - pos0)
+            if ke < 1:
+                continue
+            # speculative pages: rows [pos0, pos0+ke] must be backed; the
+            # extras beyond the admission grant are transient (rolled back
+            # after the commit). On pool pressure, clamp ke to what the
+            # current grant backs instead of stalling the slot.
+            need = self.allocator.pages_for(pos0 + ke + 1)
+            extra = need - len(self.slot_blocks[slot])
+            if extra > 0:
+                try:
+                    got = self.allocator.alloc(extra)
+                except RuntimeError:
+                    got = []
+                if got:
+                    base = len(self.slot_blocks[slot])
+                    self.slot_blocks[slot].extend(got)
+                    self.block_tables[slot, base:base + len(got)] = got
+                    self.stats["spec_extra_blocks"] += len(got)
+                else:
+                    ke = (len(self.slot_blocks[slot]) * self.page_size
+                          - 1 - pos0)
+                    if ke < 1:
+                        continue
+            mask[slot] = True
+            k_eff[slot] = ke
+            feed0[slot, 0] = self._committed_tok(slot, pos0 - 1)
+            feed1[slot, 0] = self._committed_tok(slot, pos0)
+            # verify writes rows [pos0, pos0+ke]: privatize shared pages
+            self._cow_pages(slot, pos0, pos0 + ke + 1)
+        if not mask.any():
+            return None
+        active = jnp.asarray(mask)
+        temps = jnp.asarray(self.slot_temp)
+        topk = jnp.asarray(self.slot_topk)
+        topp = jnp.asarray(self.slot_topp)
+        keys = jnp.asarray(self._slot_key)
+        ctrs = jnp.asarray((self._slot_ctr & 0x7FFFFFFF).astype(np.uint32))
+        pos = jnp.asarray(self.slot_pos)
+        n_valid = jnp.asarray(np.where(mask, k_eff + 1, 1).astype(np.int32))
+        with self._kernel_scope():
+            dtoks, dprobs = self.draft.propose(
+                jnp.asarray(feed0), jnp.asarray(feed1), pos, active, temps,
+                topk, topp, keys, ctrs)
+            out, n_acc, self.cache = self._spec_fn(
+                self.params, self.cache, jnp.asarray(feed1), dtoks, dprobs,
+                pos, n_valid, active, self._tables(), temps, topk, topp,
+                keys, ctrs)
+        out = np.asarray(out)
+        n_acc = np.asarray(n_acc)
+        self.stats["spec_turns"] += 1
+        for slot in np.nonzero(mask)[0]:
+            self._slot_ctr[slot] += 1
+            req = self._slot_req[slot]
+            res = self.results[self.slot_uid[slot]]
+            ke = int(k_eff[slot])
+            na = min(int(n_acc[slot]), ke)
+            self.stats["spec_proposed"] += ke
+            self.stats["spec_accepted"] += na
+            if req.user is not None:
+                # draft-token budget accounting: proposing ke tokens costs
+                # the user ke tokens of service whether or not they commit
+                self.scheduler.charge(req.user, ke)
+            finish = None
+            committed = 0
+            for j in range(min(na + 1, int(self.slot_budget[slot]))):
+                tok = int(out[slot, j])
+                self._emit(slot, tok)
+                committed += 1
+                if self.eos_id is not None and tok == self.eos_id:
+                    finish = "eos"
+                    break
+                if self._emitted(slot) >= req.max_new_tokens:
+                    finish = "length"
+                    break
+            res.decode_steps += 1
+            self.stats["decode_steps"] += 1
+            self.slot_pos[slot] += committed
+            self.slot_budget[slot] -= committed
+            self._rollback_spec(slot)
+            if finish is not None:
+                self._finish(slot, finish)
+        return mask
+
     # ---- decode (double-buffered) --------------------------------------
     def _decode(self):
         """Dispatch one decode step, then sync. Without overlap the sync is
@@ -968,29 +1366,39 @@ class ServeEngine:
         sync after this step's dispatch is already on the device — host
         bookkeeping and the next admission run while the device computes,
         at the cost of ids reaching callbacks one step late."""
+        skip = self._spec_turn() if self.draft is not None else None
         prev = self._pending
-        self._pending = self._dispatch_decode(prev)
+        self._pending = self._dispatch_decode(prev, skip=skip)
         if prev is not None:
             self._sync(prev)
         if not self.overlap and self._pending is not None:
             p, self._pending = self._pending, None
             self._sync(p)
 
-    def _dispatch_decode(self, prev: _Pending | None) -> _Pending | None:
+    def _dispatch_decode(self, prev: _Pending | None,
+                         skip: np.ndarray | None = None
+                         ) -> _Pending | None:
         """Enqueue one decode step on device. Continuing slots take their
         token feed from ``prev``'s device ids (never synced to host);
         slots that just finished prefill take their host-known first token.
         Positions and budgets advance at dispatch, so the mask and the COW
-        guard stay exact even while ids are in flight."""
+        guard stay exact even while ids are in flight. ``skip`` masks out
+        slots a speculative turn already advanced this step."""
         dec = (self.phase == DECODE) & (self.slot_budget > 0)
+        if skip is not None:
+            dec &= ~skip
         if not dec.any():
             return None
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for slot in np.nonzero(dec)[0]:
-            res = self.results[self.slot_uid[slot]]
-            if res.tokens:
+            if self._emitted(slot) > 0:
+                res = self.results[self.slot_uid[slot]]
                 tokens[slot, 0] = res.tokens[-1]
-            # a decode write to a prefix-shared page privatizes it first
+            else:
+                # nothing emitted yet this segment: a fork child re-decodes
+                # the prompt's last token to sample its own first one
+                tokens[slot, 0] = self._slot_feed[slot]
+            # a decode write to a shared page privatizes it first
             self._cow_pages(slot, int(self.slot_pos[slot]),
                             int(self.slot_pos[slot]) + 1)
         feed = jnp.asarray(tokens)
@@ -998,12 +1406,15 @@ class ServeEngine:
             # double-buffer: the last sampled ids are still on device
             feed = jnp.where(jnp.asarray(prev.mask)[:, None],
                              prev.ids[:, None], feed)
-        self.rng, k = jax.random.split(self.rng)
         with self._kernel_scope():
             ids, self.cache = self._decode_fn(
                 self.params, self.cache, feed,
                 jnp.asarray(self.slot_pos), jnp.asarray(dec), self._tables(),
-                jnp.asarray(self.slot_temp), k)
+                jnp.asarray(self.slot_temp),
+                jnp.asarray(self.slot_topk), jnp.asarray(self.slot_topp),
+                jnp.asarray(self._slot_key),
+                jnp.asarray((self._slot_ctr & 0x7FFFFFFF).astype(np.uint32)))
+        self._slot_ctr[dec] += 1
         self.stats["decode_steps"] += 1
         self.slot_pos[dec] += 1
         self.slot_budget[dec] -= 1

@@ -164,5 +164,10 @@ class Scheduler:
         """``entry`` was admitted: drop it and charge its tenant's service
         (prompt + generation budget tokens) for fair queuing."""
         self.remove(entry)
-        user = getattr(entry.req, "user", None)
+        self.charge(getattr(entry.req, "user", None), n_tokens)
+
+    def charge(self, user, n_tokens: int) -> None:
+        """Charge ``user`` extra service tokens outside admission — e.g.
+        the draft-model tokens a speculative turn proposes on a request's
+        behalf, which consume device time whether or not they commit."""
         self._service[user] = self._service.get(user, 0) + int(n_tokens)

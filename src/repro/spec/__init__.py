@@ -1,0 +1,19 @@
+"""Speculative decoding: draft proposer, acceptance rule, fused sampler.
+
+Two consumers share this package (see docs/serving.md):
+
+* draft-verify speculative decoding — ``DraftWorker`` proposes k tokens
+  per scheduler turn from its own dense cache; the verifier scores all
+  k+1 positions in one batched ``verify_step`` pass against its paged
+  cache; ``speculative_accept`` commits a distribution-preserving prefix
+  (exact greedy parity at temperature 0);
+* COW-forked parallel sampling — ``Request(n=4)`` forks a prefilled slot
+  into n children that share all common pages read-only and diverge
+  through the engine's copy-on-write guard.
+"""
+from repro.spec.accept import speculative_accept
+from repro.spec.draft import DraftWorker
+from repro.spec.sampling import filter_logits, filtered_probs, sample_tokens
+
+__all__ = ["DraftWorker", "filter_logits", "filtered_probs",
+           "sample_tokens", "speculative_accept"]

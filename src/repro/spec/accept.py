@@ -1,0 +1,101 @@
+"""Distribution-preserving speculative acceptance (Leviathan-style
+rejection sampling).
+
+One verifier pass scores ``k + 1`` positions; this module decides, inside
+the jitted step, how many of the k draft tokens survive and what the first
+non-draft token is. The rule per position i (0-based):
+
+* draw u_i ~ U[0,1); accept draft token x_i when
+  ``u_i < p_i(x_i) / q_i(x_i)`` where p is the verifier's (filtered)
+  distribution and q the draft's;
+* at the first rejection, resample from the *residual*
+  ``norm(max(p_i - q_i, 0))`` — the correction that makes the committed
+  marginal exactly p_i regardless of q;
+* when all k accept, the bonus token samples from p_k directly (q is
+  extended with a zero row, so the bonus falls out of the same residual
+  formula: ``max(p_k - 0, 0) = p_k``).
+
+At temperature 0 both p and q are one-hot (see
+:func:`repro.spec.sampling.filtered_probs`), the ratio test reduces to
+argmax equality, and the committed chain is exactly the verifier's greedy
+chain — speculative decoding is then a pure latency optimization with
+token-for-token parity, which the benchmark gates on.
+
+Everything is batched over slots and branch-free: slots with fewer valid
+draft tokens (``n_draft < k``) force rejection at the first invalid
+position, which makes the per-slot commit count ``n_accept + 1`` uniform
+across the pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.spec.sampling import filtered_probs
+
+
+def speculative_accept(verify_logits, draft_tokens, draft_probs, temps,
+                       top_k, top_p, keys, *, n_draft=None):
+    """Batched acceptance over one verify pass.
+
+    verify_logits: (B, k+1, V) — verifier logits at positions
+        ``L-1 .. L+k-1`` (position i scores draft token i; the last row
+        scores the bonus token).
+    draft_tokens: (B, k) int32 — the draft's proposals.
+    draft_probs: (B, k, V) float32 — the draft's *filtered* per-step
+        distributions q_i (as sampled from, temperature/top-k/top-p
+        applied; one-hot for greedy rows).
+    temps/top_k/top_p: (B,) sampling knobs (the verifier's — both models
+        must sample through the same filters for the ratio test to hold).
+    keys: (B, 2) uint32 per-slot PRNG keys.
+    n_draft: (B,) int32 — valid draft tokens per slot (None = all k).
+
+    Returns ``(tokens (B, k+1) int32, n_accept (B,) int32)``: committed
+    output is ``tokens[:, : n_accept + 1]`` — the accepted draft prefix
+    plus the residual/bonus token.
+    """
+    B, k1, V = verify_logits.shape
+    k = k1 - 1
+    p = filtered_probs(verify_logits.reshape(B * k1, V),
+                       jnp.repeat(temps, k1), jnp.repeat(top_k, k1),
+                       jnp.repeat(top_p, k1)).reshape(B, k1, V)
+    # pad q with a zero row at index k: the bonus position's residual
+    # max(p - 0, 0) is p itself, so one formula serves accept and bonus
+    q = jnp.concatenate(
+        [draft_probs, jnp.zeros((B, 1, V), draft_probs.dtype)], axis=1)
+    valid = (jnp.arange(k)[None, :] <
+             (jnp.full((B,), k, jnp.int32) if n_draft is None
+              else n_draft)[:, None])                       # (B, k)
+
+    ku, kr = jax.vmap(lambda kk: tuple(jax.random.split(kk)))(keys)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (k,)))(ku)  # (B, k)
+    p_x = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                              axis=-1)[..., 0]              # (B, k)
+    q_x = jnp.take_along_axis(q[:, :k], draft_tokens[..., None],
+                              axis=-1)[..., 0]
+    ratio = p_x / jnp.maximum(q_x, 1e-20)
+    accept = (u < ratio) & valid & (q_x > 0)
+    n_accept = jnp.cumprod(accept.astype(jnp.int32),
+                           axis=-1).sum(-1)                 # (B,)
+
+    # residual at the rejection position a = n_accept (== k => bonus row)
+    p_a = jnp.take_along_axis(p, n_accept[:, None, None],
+                              axis=1)[:, 0]                 # (B, V)
+    q_a = jnp.take_along_axis(q, n_accept[:, None, None], axis=1)[:, 0]
+    res = jnp.maximum(p_a - q_a, 0.0)
+    mass = res.sum(-1, keepdims=True)
+    # degenerate q >= p everywhere (numerical ties): fall back to p itself
+    res = jnp.where(mass > 1e-20, res / jnp.maximum(mass, 1e-20), p_a)
+    greedy = jnp.argmax(res, axis=-1)
+    drawn = jax.vmap(
+        lambda kk, row: jax.random.categorical(kk, jnp.log(
+            jnp.maximum(row, 1e-30))))(kr, res)
+    extra = jnp.where(temps <= 0, greedy, drawn).astype(jnp.int32)
+
+    # committed stream: draft tokens below n_accept, the residual/bonus
+    # token at n_accept, junk above (callers slice by n_accept + 1)
+    idx = jnp.arange(k1)[None, :]
+    toks = jnp.concatenate(
+        [draft_tokens, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    out = jnp.where(idx < n_accept[:, None], toks, extra[:, None])
+    return out.astype(jnp.int32), n_accept.astype(jnp.int32)

@@ -1,0 +1,155 @@
+"""Draft-model worker for speculative decoding.
+
+The draft is a second, smaller model (e.g. ``qwen3_0_6b`` proposing for
+``deepseek_7b``) with its own *dense* KV cache over the same slot pool —
+dense because draft state is cheap (small model, per-slot rows) and must
+survive speculative rollback without touching the verifier's block
+allocator. The worker owns three jitted graphs, all with static shapes so
+one compilation serves the whole run:
+
+* ``prefill`` — chunked ``extend_step`` over the draft cache, advanced in
+  lockstep with the engine's verifier prefill (the draft always prefills
+  from position 0: prefix-cache hits are a verifier-pool concept);
+* ``propose`` — a ``lax.scan`` of k batched ``decode_step``s that feeds the
+  last two *committed* tokens and then its own samples, collecting k draft
+  tokens and their filtered probability rows (kept on device — the engine
+  never syncs a (B, k, V) tensor);
+* ``fork`` — copy one slot's dense cache rows into another (COW-forked
+  parallel sampling: children start from the parent's draft state).
+
+Resync after a verify turn needs no KV surgery: every ``propose`` re-feeds
+from the committed stream, and rows the draft wrote past the commit point
+hold garbage that is never attended (the dense decode path masks positions
+above the feed position), then get overwritten in place on the next turn.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, extend_step, init as model_init
+from repro.models.cache import init_cache
+from repro.spec.sampling import P_DRAFT, filtered_probs, fold_keys
+
+PyTree = Any
+
+
+class DraftWorker:
+    """Small-model proposer bound to the engine's slot pool."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree | None, *,
+                 max_slots: int, max_len: int, k: int,
+                 prefill_chunk: int = 64, seed: int = 0):
+        if k < 1:
+            raise ValueError("spec_k must be >= 1")
+        self.cfg = cfg
+        self.k = k
+        self.max_slots, self.max_len = max_slots, max_len
+        self.chunk = prefill_chunk
+        self.params = (params if params is not None
+                       else model_init(jax.random.PRNGKey(seed), cfg))
+        self.cache = init_cache(cfg, max_slots, max_len)
+        #: draft prefill offset per slot (host; -1 = slot not draft-owned)
+        self.off = np.full(max_slots, -1, np.int64)
+        self._chunk_fn = jax.jit(self._chunk, donate_argnums=(0,))
+        self._propose_fn = jax.jit(self._propose, donate_argnums=(0,),
+                                   static_argnames=("temps_only",))
+        self._fork_fn = jax.jit(self._fork, donate_argnums=(0,))
+
+    # ---- jitted graphs ------------------------------------------------
+    def _chunk(self, cache, tokens, pos, n_valid, slot):
+        _, cache = extend_step(self.params, self.cfg, cache, tokens, pos,
+                               n_valid, slot)
+        return cache
+
+    def _propose(self, cache, feed0, feed1, pos0, active, temps, top_k,
+                 top_p, keys, ctrs, temps_only=False):
+        """k+1 chained decode steps: feed the last two committed tokens
+        (the first rewrites an already-correct row — the resync no-op),
+        then the draft's own samples. Collects k sampled tokens and their
+        filtered probability rows.
+
+        feed0/feed1: (B, 1) int32 committed tokens at positions
+        ``pos0 - 1`` / ``pos0``; active: (B,) bool; keys/ctrs: the raw
+        per-slot base keys and dispatch counters — folded to draft-purpose
+        stream keys here, inside the jit, so the engine never pays an
+        eager vmap per turn. ``temps_only`` is unused (kept so the jit key
+        distinguishes future sampler variants).
+        Returns (draft_tokens (B, k), draft_probs (B, k, V) float32, cache).
+        """
+        del temps_only
+        B = feed0.shape[0]
+        keys = fold_keys(keys, ctrs, P_DRAFT)
+        # resync feed: rewrite row pos0-1 (token feed0 was committed there
+        # on an earlier turn or diverged after a rejection — identical
+        # token, identical KV, so this is idempotent where it matters)
+        _, cache = decode_step(self.params, self.cfg, cache, feed0,
+                               jnp.maximum(pos0 - 1, 0),
+                               active=active & (pos0 > 0))
+
+        def body(carry, kk):
+            cache, tok, pos = carry
+            logits, cache = decode_step(self.params, self.cfg, cache, tok,
+                                        pos, active=active)
+            row = logits[:, 0]
+            probs = filtered_probs(row, temps, top_k, top_p)
+            ks = jax.vmap(jax.random.fold_in)(keys, jnp.full((B,), kk))
+            greedy = jnp.argmax(row, axis=-1)
+            drawn = jax.vmap(lambda s, pr: jax.random.categorical(
+                s, jnp.log(jnp.maximum(pr, 1e-30))))(ks, probs)
+            nxt = jnp.where(temps <= 0, greedy, drawn).astype(jnp.int32)
+            return (cache, nxt[:, None], pos + 1), (nxt, probs)
+
+        (cache, _, _), (toks, probs) = jax.lax.scan(
+            body, (cache, feed1, pos0), jnp.arange(self.k))
+        return (jnp.transpose(toks, (1, 0)),
+                jnp.transpose(probs, (1, 0, 2)), cache)
+
+    def _fork(self, cache, src, dst):
+        def f(leaf):
+            row = jax.lax.dynamic_slice_in_dim(leaf, src, 1, 0)
+            return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst, 0)
+        return jax.tree.map(f, cache)
+
+    # ---- host-side API ------------------------------------------------
+    def begin(self, slot: int) -> None:
+        """Claim a slot: its draft prefill starts from position 0."""
+        self.off[slot] = 0
+
+    def drop(self, slot: int) -> None:
+        self.off[slot] = -1
+
+    def ready(self, slot: int, prompt_len: int) -> bool:
+        """True once the slot's draft cache covers the whole prompt."""
+        return self.off[slot] >= prompt_len
+
+    def prefill_chunk(self, slot: int, prompt: np.ndarray) -> None:
+        """Advance one chunk of the draft's own prefill for ``slot``."""
+        off = int(self.off[slot])
+        t = min(self.chunk, len(prompt) - off)
+        if t <= 0:
+            return
+        buf = np.zeros((1, self.chunk), np.int32)
+        buf[0, :t] = prompt[off:off + t]
+        self.cache = self._chunk_fn(self.cache, jnp.asarray(buf),
+                                    np.int32(off), np.int32(t),
+                                    np.int32(slot))
+        self.off[slot] = off + t
+
+    def propose(self, feed0, feed1, pos0, active, temps, top_k, top_p,
+                keys, ctrs):
+        """One speculative turn: k draft tokens + their distributions."""
+        toks, probs, self.cache = self._propose_fn(
+            self.cache, feed0, feed1, pos0, active, temps, top_k, top_p,
+            keys, ctrs)
+        return toks, probs
+
+    def fork_slot(self, src: int, dst: int) -> None:
+        """Copy ``src``'s dense draft rows into ``dst`` (parallel-sampling
+        fork: the child diverges from the parent's draft state)."""
+        self.cache = self._fork_fn(self.cache, np.int32(src), np.int32(dst))
+        self.off[dst] = self.off[src]

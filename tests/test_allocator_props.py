@@ -1,6 +1,7 @@
 """Property-based invariants of the refcounted COW block allocator + prefix
-index — random alloc/share/adopt/release/publish/evict/lookup/preempt
-action sequences checked against a pure-Python oracle after every step.
+index — random alloc/share/adopt/release/publish/evict/lookup/preempt/
+fork/rollback action sequences checked against a pure-Python oracle after
+every step.
 
 Refcounted allocators are exactly the kind of code unit tests under-cover:
 the bugs live in *interleavings* (release-then-evict, adopt-then-rollback),
@@ -81,14 +82,17 @@ def _run_program(program: list[tuple[int, int]]) -> None:
     eviction path: drop a whole group at once through
     ``BlockAllocator.release`` (indexed blocks retained as cached, fresh
     ones freed), exactly what a victim evicted mid-chunk-prefill does
-    before its pages are published."""
+    before its pages are published. The ``fork`` action models COW-forked
+    parallel sampling (one incref per shared page into a new group plus a
+    fresh private tail) and ``rollback`` models speculative-decode page
+    rollback (release a suffix of one group back to the pool)."""
     alloc, index = _mk()
     groups: list[list[int]] = []    # one group per slot-like reference set
     published: list[np.ndarray] = []
     tag = 0
     owners = lambda: [b for g in groups for b in g]
     for op, arg in program:
-        op = op % 8
+        op = op % 10
         if op == 0:                                   # alloc 1..3 blocks
             n = arg % 3 + 1
             before = (list(alloc._free), alloc.ref.copy())
@@ -144,6 +148,30 @@ def _run_program(program: list[tuple[int, int]]) -> None:
             if groups:
                 g = groups.pop(arg % len(groups))
                 alloc.release(g)
+        elif op == 8:                                 # COW-fork a group
+            # engine's _fork_children: child shares a prefix of the
+            # parent's pages (incref each) and gets a fresh private tail
+            nonempty = [g for g in groups if g]
+            if nonempty:
+                g = nonempty[arg % len(nonempty)]
+                w0 = arg % (len(g) + 1)
+                fresh_n = arg % 2 + 1
+                if fresh_n <= alloc.n_available:
+                    child = list(g[:w0])
+                    for blk in child:
+                        alloc.incref(blk)
+                    child += alloc.alloc(fresh_n)
+                    groups.append(child)
+        elif op == 9:                                 # speculative rollback
+            # engine's _rollback_spec: hand a suffix of one group's pages
+            # back through the refcounted release path
+            nonempty = [g for g in groups if g]
+            if nonempty:
+                g = nonempty[arg % len(nonempty)]
+                keep = arg % len(g)
+                tail, g[keep:] = list(g[keep:]), []
+                alloc.release(tail)
+                groups = [gr for gr in groups if gr]
         _check_invariants(alloc, index, owners())
     # drain: releasing every outstanding reference must account for every
     # block as free or cached — nothing leaks
@@ -155,7 +183,7 @@ def _run_program(program: list[tuple[int, int]]) -> None:
 
 @pytest.mark.property
 @settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 63)),
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 63)),
                 max_size=80))
 def test_allocator_invariants_random_programs(program):
     _run_program(program)
@@ -168,7 +196,7 @@ def test_allocator_invariants_seeded(seed):
     on containers without hypothesis (where @given-tests skip)."""
     rng = np.random.default_rng(seed)
     program = [(int(a), int(b))
-               for a, b in zip(rng.integers(0, 8, 120),
+               for a, b in zip(rng.integers(0, 10, 120),
                                rng.integers(0, 64, 120))]
     _run_program(program)
 
