@@ -1,22 +1,38 @@
-"""Serving benchmark: dense vs paged KV cache on a mixed-length trace.
+"""Serving benchmark: dense vs paged KV, SPMD scale-out, split pools.
 
-Reports tokens/s and KV-bytes-per-request for the two cache layouts over an
-identical greedy request trace, and asserts the paper-anchored directional
-claims of the block-pool design:
+Three sections, all emitting into one ``serve_throughput.csv``:
 
-  * paged and dense emit token-for-token identical greedy outputs,
-  * paged KV bytes/request drops vs. dense at mixed prompt lengths
-    (allocation tracks actual sequence lengths, not max_len x max_slots),
-  * chunked prefill compiles ONE shape: ``prefill_recompiles`` stays
-    constant no matter how many distinct prompt lengths the trace has.
+* **layout** — dense vs paged KV cache on a mixed-length greedy trace:
+  identical tokens, paged KV bytes/request drops at mixed lengths, chunked
+  prefill compiles ONE shape.
+* **scale-out** (``--devices N``) — subprocess runs with fake CPU devices:
+  a KV-head-sharded pool under the same *per-device* HBM budget must admit
+  >= 3x the concurrent requests of single-device serving (at N = 4) at
+  <= 1.1x the per-device KV bytes per request, with exact greedy parity.
+* **split pools** — disaggregated prefill/decode slot pools: the decode
+  gap counter (engine steps where queued work exists but no decode was
+  dispatched) must not grow with prompt length under ``split_pools``,
+  while the unified engine's gap does.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
 
-from benchmarks._util import emit
+from benchmarks._util import emit, run_subprocess
+
+_COLS = ("mode", "layout", "devices", "kv_shard", "split_pools",
+         "prompt_len", "requests", "new_tokens", "tok_per_s",
+         "kv_bytes_per_request", "kv_bytes_per_request_dev",
+         "max_concurrency", "decode_gap_steps", "handoffs",
+         "prefill_chunks", "prefill_recompiles", "decode_steps")
+
+
+def _row(**kw) -> dict:
+    return {c: kw.get(c, "") for c in _COLS}
 
 
 def _requests(cfg, n: int, seed: int = 0):
@@ -31,7 +47,7 @@ def _requests(cfg, n: int, seed: int = 0):
     ]
 
 
-def main() -> None:
+def _layout_rows() -> list[dict]:
     import jax
 
     from repro.configs import get_arch, reduced
@@ -57,19 +73,20 @@ def main() -> None:
         dt = time.perf_counter() - t0
         new_tokens = sum(len(r.tokens) for r in results)
         tokens[layout] = [r.tokens for r in results]
-        rows.append({
-            "layout": layout,
-            "requests": len(results),
-            "distinct_prompt_lengths": n_lengths,
-            "new_tokens": new_tokens,
-            "tok_per_s": round(new_tokens / dt, 1),
-            "kv_bytes_per_request":
-                engine.stats["kv_bytes_alloc"] // len(results),
-            "prefill_chunks": engine.stats["prefill_chunks"],
-            "prefill_recompiles": engine.stats["prefill_recompiles"],
-            "decode_steps": engine.stats["decode_steps"],
-        })
-    emit(rows, "serve_throughput")
+        rows.append(_row(
+            mode="layout", layout=layout, devices=1, kv_shard=1,
+            split_pools=False, requests=len(results),
+            new_tokens=new_tokens, tok_per_s=round(new_tokens / dt, 1),
+            kv_bytes_per_request=(engine.stats["kv_bytes_alloc"]
+                                  // len(results)),
+            kv_bytes_per_request_dev=(engine.stats["kv_bytes_alloc_dev"]
+                                      // len(results)),
+            max_concurrency=engine.stats["max_concurrency"],
+            decode_gap_steps=engine.stats["decode_gap_steps"],
+            handoffs=engine.stats["handoffs"],
+            prefill_chunks=engine.stats["prefill_chunks"],
+            prefill_recompiles=engine.stats["prefill_recompiles"],
+            decode_steps=engine.stats["decode_steps"]))
 
     dense, paged = rows
     assert tokens["paged"] == tokens["dense"], \
@@ -80,6 +97,163 @@ def main() -> None:
     assert paged["prefill_recompiles"] == 1, (
         "chunked prefill must compile one shape across "
         f"{n_lengths} distinct prompt lengths")
+    return rows
+
+
+# one subprocess per device count: jax locks the device count at first
+# init, so 1-device and N-device engines cannot share an interpreter
+_SCALE_SNIPPET = """
+import json
+import numpy as np
+import jax
+
+N_DEV = {n_dev}
+KV_BUDGET = {budget}
+
+from repro.configs import get_arch, reduced
+from repro.models import init
+from repro.serve import Request, ServeEngine
+
+cfg = reduced(get_arch("qwen3-0.6b")).replace(
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=8, head_dim=16,
+    d_ff=128, vocab_size=512, dtype="float32")
+params = init(jax.random.PRNGKey(0), cfg)
+part = None
+if N_DEV > 1:
+    from repro.configs.base import StrategyConfig
+    from repro.core.sharding import Partitioner
+    mesh = jax.make_mesh((1, N_DEV), ("data", "model"))
+    part = Partitioner(mesh,
+                       StrategyConfig(name="ramora", tensor_parallel=True),
+                       cfg, mode="serve")
+engine = ServeEngine(cfg, params, max_slots=16, max_len=48, part=part,
+                     paged=True, page_size=8, prefill_chunk=16,
+                     kv_budget_bytes=KV_BUDGET)
+rng = np.random.default_rng(0)
+reqs = [Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                max_new_tokens=16) for i in range(20)]
+results = engine.run(reqs)
+assert engine.allocator.n_live == 0, "leaked blocks"
+print(json.dumps({{
+    "tokens": [r.tokens for r in results],
+    "kv_shard": engine._kv_shard,
+    "n_blocks": engine.n_blocks,
+    "max_concurrency": engine.stats["max_concurrency"],
+    "kv_bytes_per_request_dev":
+        engine.stats["kv_bytes_alloc_dev"] // len(results),
+}}))
+"""
+
+
+def _scale_rows(n_dev: int) -> list[dict]:
+    # the same PER-DEVICE budget on both sides: 16 blocks' worth of a
+    # 2-layer K=8 hd=16 fp32 pool (2 * 8rows * 8K * 16hd * 4B = 16 KiB
+    # per block) — single-device serving admits 4 concurrent 32-token
+    # requests; an N-way KV-head shard holds N x the blocks for the same
+    # per-device bytes and admits up to the slot cap
+    budget = 16 * 16384
+    runs = {}
+    for nd in (1, n_dev):
+        out = run_subprocess(
+            _SCALE_SNIPPET.format(n_dev=nd, budget=budget),
+            n_devices=max(nd, 1))
+        runs[nd] = json.loads(out.strip().splitlines()[-1])
+    base, multi = runs[1], runs[n_dev]
+    assert multi["tokens"] == base["tokens"], \
+        "sharded serving diverged from single-device greedy outputs"
+    assert multi["kv_shard"] == n_dev, (
+        f"expected a {n_dev}-way KV shard, got {multi['kv_shard']} "
+        "(KV heads must divide the model axis)")
+    conc1, concN = base["max_concurrency"], multi["max_concurrency"]
+    assert concN >= 3 * conc1, (
+        f"scale-out must admit >= 3x the concurrency at the same "
+        f"per-device budget: {concN} vs {conc1} x1")
+    dev1 = base["kv_bytes_per_request_dev"]
+    devN = multi["kv_bytes_per_request_dev"]
+    assert devN <= 1.1 * dev1, (
+        f"per-device KV bytes/request regressed: {devN} vs {dev1} x1")
+    return [_row(mode="scale", layout="paged", devices=nd,
+                 kv_shard=runs[nd]["kv_shard"], split_pools=False,
+                 prompt_len=16, requests=20,
+                 kv_bytes_per_request_dev=runs[nd]
+                 ["kv_bytes_per_request_dev"],
+                 max_concurrency=runs[nd]["max_concurrency"])
+            for nd in (1, n_dev)]
+
+
+def _gap_rows() -> list[dict]:
+    """Unified vs split pools on a long-prefill trace: the decode gap
+    (steps with queued work but no decode dispatched) grows with prompt
+    length when prefills monopolize unified slots; dedicated decode slots
+    keep it flat."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models import init
+    from repro.serve import Request, ServeEngine
+
+    cfg = reduced(get_arch("qwen3-0.6b")).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, dtype="float32")
+    params = init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+
+    def trace(plen: int):
+        # two short anchors seed the decode side, then a wave of long
+        # prompts whose decode budget outlasts their own prefill
+        reqs = [Request(uid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 4).astype(np.int32), max_new_tokens=40)
+            for i in range(2)]
+        reqs += [Request(uid=10 + i, prompt=rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=24)
+            for i in range(8)]
+        return reqs
+
+    rows, gaps = [], {}
+    for split in (False, True):
+        for plen in (32, 128):
+            engine = ServeEngine(cfg, params, max_slots=4, max_len=160,
+                                 paged=True, page_size=8, prefill_chunk=8,
+                                 split_pools=split,
+                                 prefill_slots=2 if split else None)
+            results = engine.run(trace(plen))
+            assert all(r.finish_reason == "length" for r in results)
+            gaps[(split, plen)] = engine.stats["decode_gap_steps"]
+            rows.append(_row(
+                mode="gap", layout="paged", devices=1, kv_shard=1,
+                split_pools=split, prompt_len=plen, requests=10,
+                max_concurrency=engine.stats["max_concurrency"],
+                decode_gap_steps=engine.stats["decode_gap_steps"],
+                handoffs=engine.stats["handoffs"],
+                decode_steps=engine.stats["decode_steps"]))
+    uni_growth = gaps[(False, 128)] - gaps[(False, 32)]
+    split_growth = gaps[(True, 128)] - gaps[(True, 32)]
+    assert uni_growth > 0, (
+        f"unified engine should stall more at longer prompts: "
+        f"{gaps[(False, 32)]} -> {gaps[(False, 128)]}")
+    assert split_growth <= max(2, uni_growth // 4), (
+        f"split-pool decode gap must not grow with prompt length: "
+        f"{gaps[(True, 32)]} -> {gaps[(True, 128)]} "
+        f"(unified grew {uni_growth})")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="also run the SPMD scale-out comparison: a "
+                         "subprocess pair (1 vs N fake devices) under the "
+                         "same per-device KV budget")
+    # parse_known_args: benchmarks.run invokes suite mains with run.py's own
+    # argv still in sys.argv — ignore its flags instead of erroring
+    args, _ = ap.parse_known_args(argv)
+
+    rows = _layout_rows()
+    rows += _gap_rows()
+    if args.devices > 1:
+        rows += _scale_rows(args.devices)
+    emit(rows, "serve_throughput")
 
 
 if __name__ == "__main__":

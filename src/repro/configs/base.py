@@ -160,6 +160,13 @@ class ModelConfig:
     sched_aging: int = 64
     preemption: bool = False
     overlap_decode: bool = False
+    # disaggregated prefill/decode pools (repro.serve.engine): partition
+    # the slot pool so ``prefill_slots`` slots only chunk-prefill and the
+    # rest only decode; a finished prompt hands its KV to a decode slot by
+    # republishing pages through the block table (zero tensor copies).
+    # ``prefill_slots`` 0 => auto (max(1, max_slots // 4)).
+    split_pools: bool = False
+    prefill_slots: int = 0
     # speculative decoding (repro.spec): ``draft_model`` names a registry
     # arch whose (smaller) model proposes ``spec_k`` tokens per scheduler
     # turn from its own dense cache; the serving model verifies all of
@@ -212,6 +219,12 @@ class ModelConfig:
         if self.preemption and not self.paged_kv:
             raise ValueError("preemption requires paged_kv=True: dense "
                              "slots hold no reclaimable blocks")
+        if self.split_pools and not self.paged_kv:
+            raise ValueError("split_pools requires paged_kv=True: the "
+                             "prefill->decode handoff republishes pool "
+                             "pages through the block table")
+        if self.prefill_slots < 0:
+            raise ValueError("prefill_slots must be >= 0 (0 = auto)")
         _quant_names = ("", "int8", "fp8", "float8_e4m3fn")
         for field_name in ("weight_dtype", "kv_dtype"):
             if getattr(self, field_name) not in _quant_names:

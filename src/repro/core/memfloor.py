@@ -273,6 +273,40 @@ def hbm_peak_floor(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSizes,
             "total": total}
 
 
+def d2d_bytes_serve_decode(cfg: ModelConfig, batch: int, kv_shard: int,
+                           *, abytes: int = 2) -> dict:
+    """Per-device die-to-die interconnect bytes for ONE sharded decode step.
+
+    KV-head-sharded serving (core/sharding.py ``mode="serve"``) keeps decode
+    math communication-free *inside* the attention op — heads are a batch
+    dim — so the only cross-die traffic per step is:
+
+    - **attention partial outputs**: each attention layer's per-shard head
+      slice is all-gathered before the (replicated) output projection. An
+      all-gather of an ``N``-way-sharded tensor moves ``size × (N-1)/N``
+      bytes through each device's links;
+    - **sampled ids**: the fused sampler runs on replicated logits, so the
+      per-step id exchange is one ``int32`` per sequence (bounded above by
+      the same ``(N-1)/N`` all-gather factor — negligible next to the
+      activation term, kept for completeness).
+
+    Sharded-KV *reads* stay local HBM traffic by design (that is the point
+    of sharding the pool by KV head) — they show up in ``_cache_bytes``
+    divided by ``kv_shard``, never on the interconnect. ``kv_shard <= 1``
+    returns zeros: replicated pools do no d2d work.
+    """
+    n = max(int(kv_shard), 1)
+    if n == 1:
+        return {"attn_out_allgather": 0.0, "sampled_ids": 0.0, "total": 0.0}
+    frac = (n - 1) / n
+    hd = cfg.resolved_head_dim
+    n_attn = sum(1 for sp in cfg.all_layers() if sp.mixer in ("full", "local"))
+    attn = batch * cfg.n_heads * hd * abytes * n_attn * frac
+    ids = batch * 4 * frac
+    return {"attn_out_allgather": attn, "sampled_ids": ids,
+            "total": attn + ids}
+
+
 def _cache_bytes(cfg: ModelConfig, b_loc: float, s: int, mesh: MeshSizes
                  ) -> float:
     """KV/recurrent cache bytes per device (read in decode / written in

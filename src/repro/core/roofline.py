@@ -116,7 +116,8 @@ def analyze_costs(*, flops_per_dev: float, bytes_per_dev: float,
                   collective_bytes_per_dev: float, collectives: dict,
                   arch: str, shape: str, n_chips: int,
                   compute_dtype: str = "bfloat16",
-                  memory_floor_bytes_per_dev: float | None = None) -> dict:
+                  memory_floor_bytes_per_dev: float | None = None,
+                  d2d_bytes_per_dev: float | None = None) -> dict:
     """Roofline terms. Note: XLA ``cost_analysis()`` and the post-SPMD HLO are
     per-partition (per-device) quantities; globals are ×n_chips, so the
     prompt's "global / (chips × peak)" formulas reduce to per-device / peak.
@@ -124,6 +125,12 @@ def analyze_costs(*, flops_per_dev: float, bytes_per_dev: float,
     The memory term uses the analytic TPU floor (core/memfloor.py) when
     provided: XLA:CPU float-normalization inflates bf16 "bytes accessed" ~5x
     (calibrated), so the CPU number is kept as ``memory_s_xla_cpu_upper``.
+
+    ``d2d_bytes_per_dev`` (analytic, ``memfloor.d2d_bytes_serve_decode``)
+    adds a fourth **die-to-die interconnect** term for KV-head-sharded
+    serving — the per-step all-gather of attention partial outputs and
+    sampled ids over the ICI/D2D links; omit it (the default) and the
+    roofline is exactly the three-term model.
     """
     flops_global = flops_per_dev * n_chips
     bytes_global = bytes_per_dev * n_chips
@@ -137,6 +144,8 @@ def analyze_costs(*, flops_per_dev: float, bytes_per_dev: float,
     collective_s = cbytes_global / (n_chips * CHIP.ici_link_bw)
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
+    if d2d_bytes_per_dev is not None:
+        terms["d2d_s"] = d2d_bytes_per_dev / CHIP.ici_link_bw
     bottleneck = max(terms, key=terms.get).replace("_s", "")
     step_s = max(terms.values())
     mf = model_flops(arch, shape)

@@ -11,6 +11,7 @@ mesh axes, the axis is dropped (replicated) rather than padded — e.g. qwen3's
 """
 from __future__ import annotations
 
+import logging
 import math
 import re
 from functools import partial
@@ -24,6 +25,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig, StrategyConfig
 
 PyTree = Any
+
+log = logging.getLogger("repro.sharding")
 
 
 def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
@@ -51,9 +54,25 @@ class Partitioner:
         self.cfg = cfg
         self.shape = shape
         self.mode = mode
+        # divisibility drops recorded per (label, dim): surfaced by
+        # launch/serve.py so serve-mode misconfigs (e.g. 8 KV heads on a
+        # 16-way model axis) are visible instead of silently replicating.
+        self.dropped: list[dict] = []
+        self._drop_seen: set = set()
         st = strategy
         have_pod = "pod" in mesh.shape
-        if st.name == "occamy":
+        if mode == "serve":
+            # Serving data plane: params and activations replicated, the
+            # paged KV block pools (and per-row quant scales) sharded by KV
+            # head over 'model'. Block tables / lengths / per-slot scalars
+            # stay replicated scalar-prefetch operands.
+            pool = ("model",) if "model" in mesh.shape else None
+            self.axis_map = {"batch": None, "seq": None, "heads": None,
+                             "kv": None, "mlp": None, "vocab": None,
+                             "experts": None, "fsdp": None, "tp": None,
+                             "expert": None, "embed_fsdp": None,
+                             "kv_pool": pool}
+        elif st.name == "occamy":
             # flat crossbar-era: every chip is a DP rank, params replicated
             flat = tuple(a for a in (("pod",) if have_pod else ())
                          + ("data", "model"))
@@ -104,7 +123,8 @@ class Partitioner:
     def logical_size(self, name: str) -> int:
         return _axes_size(self.mesh, self.axis_map.get(name))
 
-    def spec(self, logical: tuple, shape: tuple | None = None) -> P:
+    def spec(self, logical: tuple, shape: tuple | None = None,
+             label: str | None = None) -> P:
         parts = []
         used: set = set()
         for i, name in enumerate(logical):
@@ -115,6 +135,7 @@ class Partitioner:
                 # fsdp->(data,model) -> dim1 keeps only 'data')
                 axes = tuple(a for a in axes if a not in used)
             if axes and shape is not None and shape[i] % _axes_size(self.mesh, axes):
+                self._note_drop(label or name, i, axes, shape[i])
                 axes = None  # not divisible -> replicate
             if axes:
                 parts.append(axes[0] if len(axes) == 1 else tuple(axes))
@@ -122,6 +143,18 @@ class Partitioner:
             else:
                 parts.append(None)
         return P(*parts)
+
+    def _note_drop(self, label: str, dim: int, axes: tuple, size: int) -> None:
+        key = (label, dim, axes)
+        if key in self._drop_seen:
+            return
+        self._drop_seen.add(key)
+        rec = {"label": label, "dim": dim, "axes": list(axes), "size": size,
+               "axis_size": _axes_size(self.mesh, axes)}
+        self.dropped.append(rec)
+        log.warning("sharding drop: %s dim %d (size %d) not divisible by "
+                    "mesh axes %s (x%d) -> replicated", label, dim, size,
+                    axes, rec["axis_size"])
 
     def act(self, x: jnp.ndarray, logical: tuple) -> jnp.ndarray:
         s = self.spec(logical, x.shape)
@@ -227,6 +260,72 @@ class Partitioner:
 
     def scalar_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, P())
+
+    # ------------------------------------------------------------------
+    # serving (mode="serve"): paged KV block pools
+    # ------------------------------------------------------------------
+    @property
+    def kv_shard(self) -> int:
+        """How many ways the paged KV pools shard over 'model' (by KV head).
+
+        1 when the mode is not "serve", the mesh has no model axis, or the
+        KV head count does not divide it (divisibility-drop -> replicated).
+        """
+        if self.mode != "serve" or "model" not in self.mesh.shape:
+            return 1
+        n = self.mesh.shape["model"]
+        kv = self.cfg.n_kv_heads or self.cfg.n_heads
+        return n if n > 1 and kv % n == 0 else 1
+
+    def _pool_logical(self, path: str, shape: tuple) -> tuple | None:
+        """Logical axes for a paged block-pool leaf, or None if not a pool.
+
+        Pools are ``(n_blocks, page, K, hd)`` (+ a leading n_rep dim for
+        scan-stacked blocks); per-row quant scales are ``(n_blocks, page,
+        K)``. Both shard dim K ('kv_pool' -> model) by KV head.
+        """
+        kv = self.cfg.n_kv_heads or self.cfg.n_heads
+        lead = ("blocks" in path)
+        nd = len(shape) - (1 if lead else 0)
+        if nd not in (3, 4) or shape[-1 if nd == 3 else -2] != kv:
+            return None
+        base = (None, None, "kv_pool") + ((None,) if nd == 4 else ())
+        return ((None,) + base) if lead else base
+
+    def serve_cache_sharding(self, cache_tree: PyTree,
+                             n_blocks: int) -> PyTree:
+        """NamedShardings for a serving cache: block pools (and quant
+        scales) sharded by KV head over 'model', everything else (dense
+        ring buffers, positions) replicated."""
+        def f(path, leaf):
+            pstr = "/".join(_key_str(k) for k in path)
+            if n_blocks and leaf.ndim >= 3:
+                lead = ("blocks" in pstr)
+                if leaf.shape[1 if lead else 0] == n_blocks:
+                    logical = self._pool_logical(pstr, leaf.shape)
+                    if logical is not None:
+                        return self.named(logical, leaf.shape)
+            return NamedSharding(self.mesh, P(*([None] * leaf.ndim)))
+        return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+    def serve_cache_constraint(self, cache_tree: PyTree,
+                               shardings: PyTree) -> PyTree:
+        """Pin a cache pytree to its serve shardings inside a jitted graph
+        so donation keeps a stable layout across engine steps."""
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            cache_tree, shardings)
+
+    def serve_kv_scope(self):
+        """Context manager advertising the sharded pool layout to the kernel
+        registry (read by the sharded ``paged_attention`` ``supports()``).
+        No-op (null context) when the pools are replicated."""
+        import contextlib
+
+        from repro.kernels import dispatch as kdispatch
+        if self.kv_shard <= 1:
+            return contextlib.nullcontext()
+        return kdispatch.serve_mesh_scope(self.mesh, "model")
 
 
 def _key_str(k) -> str:

@@ -40,7 +40,8 @@ __all__ = [
     "BACKENDS", "Backend", "BlockSpec", "KERNEL_BACKENDS", "OpImpl",
     "OpRequest", "OpRegistry", "blocks_from_pairs", "default_backend_name",
     "kernel_scope_active", "negotiated_model_backend", "registry",
-    "requested_backend", "resolve_backend", "spmd_xla_scope", "use_backend",
+    "requested_backend", "resolve_backend", "serve_mesh", "serve_mesh_scope",
+    "spmd_xla_scope", "use_backend",
 ]
 
 #: Valid backend names. ``ref`` is the pure-jnp oracle, ``interpret`` runs the
@@ -131,6 +132,34 @@ def spmd_xla_scope():
     if kernel_scope_active():
         return use_backend("ref")
     return contextlib.nullcontext()
+
+
+_serve_mesh: contextvars.ContextVar[tuple | None] = contextvars.ContextVar(
+    "repro_serve_mesh", default=None)
+
+
+@contextlib.contextmanager
+def serve_mesh_scope(mesh, axis: str):
+    """Advertise a sharded serving layout to ``supports()`` predicates.
+
+    Opened (at trace time) by the model layer around registry dispatches
+    whose pool operands are sharded over ``mesh`` axis ``axis`` — e.g. the
+    paged KV block pools sharded by KV head. Implementations that can run
+    the op under ``shard_map`` on that layout key their ``supports()`` off
+    :func:`serve_mesh`; everything else sees the operands as global arrays
+    and negotiation falls through to the local/ref paths unchanged.
+    """
+    tok = _serve_mesh.set((mesh, axis))
+    try:
+        yield
+    finally:
+        _serve_mesh.reset(tok)
+
+
+def serve_mesh() -> tuple | None:
+    """The active ``(mesh, axis)`` serving layout, or None outside a
+    :func:`serve_mesh_scope`."""
+    return _serve_mesh.get()
 
 
 def negotiated_model_backend(cfg_backend: str) -> str | None:

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.dispatch import OpRequest, registry, use_backend
+from repro.kernels.dispatch import (OpRequest, registry, serve_mesh,
+                                    use_backend)
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.gemm import gemm as _gemm
 from repro.kernels.gemm_wq import gemm_wq as _gemm_wq
@@ -277,6 +278,42 @@ def _pa_ref(q, k_pool, v_pool, block_tables, lengths, k_scale=None,
             v_scale=None, *, scale: float | None = None, cap: float = 0.0):
     return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
                                     k_scale, v_scale, scale=scale, cap=cap)
+
+
+def _pa_sharded_supports(req: OpRequest) -> bool:
+    """Sharded layout negotiation: only inside a ``serve_mesh_scope`` (the
+    model layer advertising KV-head-sharded pools), and only when the KV
+    head count divides the mesh axis — otherwise the pools were replicated
+    by the divisibility-drop rule and the local paths serve unchanged."""
+    sm = serve_mesh()
+    if sm is None or len(req.shapes) < 5:
+        return False
+    if len(req.shapes[0]) != 4 or any(len(s) != 4 for s in req.shapes[1:3]):
+        return False
+    (B, K, G, D) = req.shapes[0]
+    (N, page, Kp, Dp) = req.shapes[1]
+    if not (Kp == K and Dp == D
+            and all("int" in d for d in req.dtypes[3:5])):
+        return False
+    if len(req.shapes) >= 7 and not (req.shapes[5] == (N, page, K)
+                                     == req.shapes[6]):
+        return False
+    mesh, axis = sm
+    n = mesh.shape.get(axis, 1)
+    return n > 1 and K % n == 0
+
+
+@registry.register("paged_attention", "sharded",
+                   backends=("ref", "interpret", "pallas"),
+                   supports=_pa_sharded_supports, priority=20)
+def _pa_sharded(q, k_pool, v_pool, block_tables, lengths, k_scale=None,
+                v_scale=None, *, scale: float | None = None,
+                cap: float = 0.0):
+    from repro.kernels.paged_attention import paged_attention_sharded
+    mesh, axis = serve_mesh()
+    return paged_attention_sharded(q, k_pool, v_pool, block_tables, lengths,
+                                   k_scale, v_scale, mesh=mesh, axis=axis,
+                                   scale=scale, cap=cap)
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, lengths, k_scale=None,

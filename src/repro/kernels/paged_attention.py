@@ -143,3 +143,49 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *args)
+
+
+def paged_attention_sharded(q, k_pool, v_pool, block_tables, lengths,
+                            k_scale=None, v_scale=None, *, mesh, axis: str,
+                            scale: float | None = None, cap: float = 0.0):
+    """Sharded paged decode attention: ``shard_map`` over mesh ``axis``.
+
+    Serving shards the block pools by KV head over the model axis (the
+    per-chiplet HBM slice of the paper's scale-out arc): pools arrive
+    ``(N, page, K/n, D)`` per shard, q replicated, block tables and lengths
+    replicated scalar-prefetch operands. Each shard runs the *local* paged
+    read over its own KV heads — heads are batch-like in decode attention,
+    so the pass is communication-free; the (B, K, G, D) output shards over
+    K and all-gathers only where downstream math (o_proj) needs the full
+    head dim, which GSPMD inserts outside this body. Quantized pools carry
+    their per-row scales sharded identically.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.collectives import shard_map_compat
+    from repro.kernels.ref import paged_attention_ref
+
+    head_spec = P(None, axis, None, None)
+    pool_spec = P(None, None, axis, None)
+    scale_spec = P(None, None, axis)
+    quant = k_scale is not None
+
+    if quant:
+        def body(ql, kl, vl, tbl, ln, ksl, vsl):
+            return paged_attention_ref(ql, kl, vl, tbl, ln, ksl, vsl,
+                                       scale=scale, cap=cap)
+        sm = shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(head_spec, pool_spec, pool_spec, P(), P(),
+                      scale_spec, scale_spec),
+            out_specs=head_spec)
+        return sm(q, k_pool, v_pool, block_tables, lengths, k_scale, v_scale)
+
+    def body(ql, kl, vl, tbl, ln):
+        return paged_attention_ref(ql, kl, vl, tbl, ln,
+                                   scale=scale, cap=cap)
+    sm = shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(head_spec, pool_spec, pool_spec, P(), P()),
+        out_specs=head_spec)
+    return sm(q, k_pool, v_pool, block_tables, lengths)

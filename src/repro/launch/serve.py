@@ -2,22 +2,23 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 12 --slots 4 --max-new 24
+
+``--devices N`` serves SPMD: the paged KV pools shard by KV head over an
+N-way model axis (fake CPU devices when no accelerator is attached — the
+flag must therefore be handled *before* jax initializes, which is why the
+heavy imports live inside :func:`main`). ``--split-pools`` disaggregates
+the slot pool into prefill and decode halves (see docs/serving.md).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
-
-import jax
-import numpy as np
-
-from repro.configs import get_arch, reduced
-from repro.models import init as model_init
-from repro.serve import Request, ServeEngine
 
 
 def _pct_ms(vals, q):
+    import numpy as np
     vals = [v for v in vals if v is not None]
     return round(float(np.percentile(vals, q)) * 1e3, 1) if vals else None
 
@@ -114,7 +115,37 @@ def main(argv=None):
     ap.add_argument("--slo-itl-ms", type=float, default=None,
                     help="mean inter-token SLO target stamped on every "
                          "synthetic request")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="serve SPMD over an N-way model axis: the paged "
+                         "KV pools shard by KV head (replicated fallback "
+                         "when the head count does not divide). Forces N "
+                         "fake CPU devices when jax sees fewer real ones "
+                         "(0 = single-device serving)")
+    ap.add_argument("--split-pools", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="disaggregate the slot pool: dedicated prefill "
+                         "slots hand finished prompts to decode slots by "
+                         "republishing pool pages (requires --paged; "
+                         "default: cfg.split_pools)")
+    ap.add_argument("--prefill-slots", type=int, default=None,
+                    help="prefill-pool size under --split-pools "
+                         "(default: cfg.prefill_slots, 0 = slots // 4)")
     args = ap.parse_args(argv)
+
+    if args.devices > 1:
+        # must land before jax initializes its backend: fake CPU devices
+        # are minted at first import when no accelerator provides enough
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch, reduced
+    from repro.models import init as model_init
+    from repro.serve import Request, ServeEngine
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -135,8 +166,21 @@ def main(argv=None):
             draft_cfg = draft_cfg.replace(vocab_size=cfg.vocab_size)
         draft_params = model_init(jax.random.PRNGKey(args.seed + 1),
                                   draft_cfg)
+    part = None
+    if args.devices > 1:
+        from repro.configs.base import StrategyConfig
+        from repro.core.sharding import Partitioner
+        if len(jax.devices()) < args.devices:
+            raise SystemExit(
+                f"--devices {args.devices} but jax sees "
+                f"{len(jax.devices())} (XLA_FLAGS was set too late?)")
+        mesh = jax.make_mesh((1, args.devices), ("data", "model"))
+        part = Partitioner(mesh,
+                           StrategyConfig(name="ramora",
+                                          tensor_parallel=True),
+                           cfg, mode="serve")
     engine = ServeEngine(cfg, params, max_slots=args.slots,
-                         max_len=args.max_len, seed=args.seed,
+                         max_len=args.max_len, seed=args.seed, part=part,
                          kernel_backend=args.kernel_backend,
                          paged=args.paged, page_size=args.page_size,
                          prefill_chunk=args.prefill_chunk,
@@ -146,7 +190,8 @@ def main(argv=None):
                          sched=args.sched, sched_aging=args.sched_aging,
                          preemption=args.preemption, overlap=args.overlap,
                          draft_model=draft_cfg, draft_params=draft_params,
-                         spec_k=args.spec_k)
+                         spec_k=args.spec_k, split_pools=args.split_pools,
+                         prefill_slots=args.prefill_slots)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -175,6 +220,11 @@ def main(argv=None):
     dt = time.time() - t0
     new_tokens = sum(len(r.tokens) for r in results)
     new_tokens += sum(len(c.tokens) for r in results for c in r.children)
+    # analytic d2d floor: per-device interconnect seconds per decode step
+    # under the KV-head shard (zeros on one device / replicated pools)
+    from repro.core.memfloor import d2d_bytes_serve_decode
+    from repro.core.topology import CHIP
+    d2d = d2d_bytes_serve_decode(cfg, engine.max_slots, engine._kv_shard)
     print(json.dumps({
         "arch": cfg.name, "requests": len(results),
         "completed": sum(1 for r in results if r.finish_reason),
@@ -191,8 +241,25 @@ def main(argv=None):
         "kv_bytes_cached": engine.stats["kv_bytes_cached"],
         "kv_bytes_per_request": (engine.stats["kv_bytes_alloc"]
                                  // max(len(results), 1)),
+        "devices": args.devices or 1,
+        "kv_shard": engine._kv_shard,
+        # divisibility drops (e.g. KV heads not dividing the model axis)
+        # replicate silently inside the Partitioner — surface them here so
+        # a misconfigured mesh is visible in the run record
+        "dropped_axes": (part.dropped if part is not None else []),
+        "kv_bytes_per_request_dev": (engine.stats["kv_bytes_alloc_dev"]
+                                     // max(len(results), 1)),
+        "d2d_bytes_per_step_dev": round(d2d["total"], 1),
+        "d2d_s_floor_per_step": d2d["total"] / CHIP.ici_link_bw,
+        "split_pools": engine.split_pools,
+        "prefill_slots": engine.prefill_slots,
+        "handoffs": engine.stats["handoffs"],
+        "handoff_wait_steps": engine.stats["handoff_wait_steps"],
+        "decode_gap_steps": engine.stats["decode_gap_steps"],
+        "max_concurrency": engine.stats["max_concurrency"],
         "sched": engine.scheduler.policy,
         "sched_skips": engine.stats["sched_skips"],
+        "sched_requeues": engine.scheduler.stats["requeues"],
         "preemptions": engine.stats["preemptions"],
         "spec_k": engine.spec_k if engine.draft is not None else None,
         "spec_turns": engine.stats["spec_turns"],

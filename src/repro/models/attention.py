@@ -12,6 +12,7 @@ Occamy's HBM channels across Ramora's mesh edge routers.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from functools import partial
 from typing import Any
@@ -281,7 +282,8 @@ def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
             posv = pos if vec_pos else jnp.full((B,), pos, jnp.int32)
             return _paged_decode(p, cfg, q, k, v, cache, pos=posv,
                                  active=active, block_tables=block_tables,
-                                 compute_dtype=compute_dtype, x_dtype=x.dtype)
+                                 compute_dtype=compute_dtype, x_dtype=x.dtype,
+                                 part=part)
         S_buf = cache["k"].shape[1]
         is_ring = is_local and cfg.window and S_buf == cfg.window
         if is_ring:
@@ -339,7 +341,7 @@ def attention_decode(p: Params, cfg: ModelConfig, x, cache: dict, *,
 
 
 def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
-                  block_tables, compute_dtype, x_dtype):
+                  block_tables, compute_dtype, x_dtype, part=None):
     """Single-token decode against the block-pool (paged) KV layout.
 
     q: (B, 1, K, G, D), k/v: (B, 1, K, D) — already projected, normed, and
@@ -387,7 +389,13 @@ def _paged_decode(p: Params, cfg: ModelConfig, q, k, v, cache, *, pos, active,
     from repro.kernels.ops import paged_attention as _reg_pa
     be = (kdispatch.negotiated_model_backend(cfg.resolved_kernel_backend)
           or "ref")
-    with kdispatch.use_backend(be):
+    # serve-mode partitioner with KV-head-sharded pools: advertise the
+    # layout so negotiation picks the shard_map'd impl (communication-free
+    # per-shard reads); replicated pools fall through to the local paths
+    serve_kv = (part.serve_kv_scope() if part is not None
+                and getattr(part, "mode", None) == "serve"
+                else contextlib.nullcontext())
+    with serve_kv, kdispatch.use_backend(be):
         out = _reg_pa(q[:, 0], pool_k, pool_v, block_tables, pos + 1,
                       k_sc, v_sc, scale=_scale(cfg), cap=cfg.attn_softcap)
     out = out.reshape(B, 1, H * hd).astype(compute_dtype)

@@ -176,10 +176,14 @@ def kv_block_bytes(cfg: ModelConfig, page_size: int) -> int:
     return n_paged * page_size * per_row
 
 
-def n_blocks_for_bytes(cfg: ModelConfig, hbm_bytes: int, page_size: int
-                       ) -> int:
-    """Pool blocks (null block included) a KV-HBM budget admits — the
-    precision dividend: int8/fp8 KV roughly doubles/quadruples the blocks
-    the same budget holds vs bf16/fp32."""
-    per_block = kv_block_bytes(cfg, page_size)
+def n_blocks_for_bytes(cfg: ModelConfig, hbm_bytes: int, page_size: int,
+                       kv_shard: int = 1) -> int:
+    """Pool blocks (null block included) a *per-device* KV-HBM budget
+    admits — the precision dividend: int8/fp8 KV roughly doubles/quadruples
+    the blocks the same budget holds vs bf16/fp32. ``kv_shard`` (> 1 when a
+    serve-mode partitioner shards the pools by KV head over the model axis)
+    is the capacity dividend of scale-out: each block costs every device
+    only ``1/kv_shard`` of its bytes, so the same per-device budget holds
+    ``kv_shard×`` the blocks."""
+    per_block = kv_block_bytes(cfg, page_size) // max(kv_shard, 1)
     return max(int(hbm_bytes // max(per_block, 1)), 1) + 1

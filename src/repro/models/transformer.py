@@ -511,7 +511,7 @@ def _decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, part=None,
 
 
 def extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
-                *, block_tables=None, first_new_pos=0):
+                *, block_tables=None, first_new_pos=0, part=None):
     """Chunked-prefill step: extend ONE slot of the pooled cache by up to T
     tokens. tokens: (1, T) int32 at absolute positions ``pos..pos+T-1``;
     ``n_valid`` (traced scalar) marks the ragged tail — padded positions
@@ -525,18 +525,19 @@ def extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
 
     All of pos/n_valid/slot/first_new_pos trace as scalars, so ONE compiled
     shape serves every chunk of every prompt length, cached prefix or not.
-    Local-only (no partitioner): SPMD serving keeps the whole-prompt
-    prefill path. Returns (logits (1, 1, V) at the last valid position,
-    new_cache).
+    ``part`` (serve-mode partitioner): the chunk runs under SPMD with the
+    pool scatters/gathers partitioned by KV head — the per-layer math is
+    identical, so sharded chunked prefill is token-exact with local.
+    Returns (logits (1, 1, V) at the last valid position, new_cache).
     """
-    with _model_kernel_scope(cfg, None):
+    with _model_kernel_scope(cfg, part):
         return _extend_step(params, cfg, cache, tokens, pos, n_valid, slot,
                             block_tables=block_tables,
-                            first_new_pos=first_new_pos)
+                            first_new_pos=first_new_pos, part=part)
 
 
 def _extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
-                 *, block_tables=None, first_new_pos=0):
+                 *, block_tables=None, first_new_pos=0, part=None):
     x = embed_tokens(params, cfg, tokens)
     T = x.shape[1]
     if cfg.learned_pos and "pos_embed" in params:
@@ -549,12 +550,12 @@ def _extend_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, slot,
                                     n_valid=n_valid,
                                     first_new_pos=first_new_pos)
     h_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, 1)
-    logits = logits_fn(params, cfg, h_last, None)[..., :cfg.vocab_size]
+    logits = logits_fn(params, cfg, h_last, part)[..., :cfg.vocab_size]
     return logits, new_cache
 
 
 def verify_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, *,
-                active=None, block_tables=None):
+                active=None, block_tables=None, part=None):
     """Speculative-verification step: score T tokens for EVERY slot in one
     pass. tokens: (B, T) int32 — slot b's rows sit at absolute positions
     ``pos[b] .. pos[b]+T-1``; ``n_valid`` ((B,) int32) marks each slot's
@@ -569,13 +570,14 @@ def verify_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, *,
     uncommitted rows back by never advancing ``slot_pos`` past the accepted
     prefix, and releasing any speculative pages through the allocator).
     """
-    with _model_kernel_scope(cfg, None):
+    with _model_kernel_scope(cfg, part):
         return _verify_step(params, cfg, cache, tokens, pos, n_valid,
-                            active=active, block_tables=block_tables)
+                            active=active, block_tables=block_tables,
+                            part=part)
 
 
 def _verify_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, *,
-                 active=None, block_tables=None):
+                 active=None, block_tables=None, part=None):
     x = embed_tokens(params, cfg, tokens)
     B, T = tokens.shape
     if cfg.learned_pos and "pos_embed" in params:
@@ -586,7 +588,7 @@ def _verify_step(params, cfg: ModelConfig, cache, tokens, pos, n_valid, *,
                                     mode="verify", part=None, active=active,
                                     block_tables=block_tables,
                                     n_valid=n_valid)
-    logits = logits_fn(params, cfg, x, None)[..., :cfg.vocab_size]
+    logits = logits_fn(params, cfg, x, part)[..., :cfg.vocab_size]
     return logits, new_cache
 
 

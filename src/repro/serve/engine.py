@@ -173,9 +173,17 @@ class BlockAllocator:
     so a partial failure never leaks blocks.
     """
 
-    def __init__(self, n_blocks: int, page_size: int):
+    def __init__(self, n_blocks: int, page_size: int, n_shards: int = 1):
         self.n_blocks = n_blocks
         self.page_size = page_size
+        #: mesh shards the pool tensors are split over (serve-mode KV-head
+        #: sharding). Block ids are *global*: every shard holds rows
+        #: ``1/n_shards`` of each block, so one grant is implicitly a
+        #: transaction of ``n_shards`` per-shard sub-grants that commit and
+        #: roll back atomically — the single free list IS the cross-shard
+        #: transaction log, and budgets are per-shard by construction
+        #: (every device pays ``block_bytes / n_shards`` per granted block).
+        self.n_shards = max(1, n_shards)
         self._free = list(range(n_blocks - 1, 0, -1))
         self.ref = np.zeros(n_blocks, np.int32)
         self.evictor = None      # PrefixIndex (or None): reclaims cached
@@ -302,7 +310,9 @@ class ServeEngine:
                  overlap: bool | None = None,
                  draft_model: "ModelConfig | str | None" = None,
                  draft_params: PyTree | None = None,
-                 spec_k: int | None = None):
+                 spec_k: int | None = None,
+                 split_pools: bool | None = None,
+                 prefill_slots: int | None = None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
@@ -320,8 +330,7 @@ class ServeEngine:
         # semantics change.
         want_prefix = (cfg.prefix_cache if prefix_cache is None
                        else prefix_cache)
-        self.prefix_capable = (self.paged and part is None
-                               and cfg.encoder is None
+        self.prefix_capable = (self.paged and cfg.encoder is None
                                and all(sp.mixer == "full"
                                        for sp in cfg.all_layers()))
         self.prefix_cache = bool(want_prefix) and self.prefix_capable
@@ -329,9 +338,19 @@ class ServeEngine:
                            else prefix_lru)
         if self.prefix_lru < 0:     # engine kwarg / --prefix-lru bypasses
             raise ValueError("prefix_lru must be >= 0")
+        # SPMD serving: a serve-mode Partitioner shards the paged KV pools
+        # (and their per-row quant scales) over the model axis by KV head;
+        # everything per-slot — block tables, lengths, sampling state —
+        # stays replicated host metadata. ``kv_shard`` > 1 is the capacity
+        # dividend: each device holds 1/kv_shard of every block.
+        self._kv_shard = 1
         if self.paged and part is not None:
-            raise ValueError("paged serving is local-only: SPMD serving "
-                             "keeps the dense layout")
+            if getattr(part, "mode", None) != "serve":
+                raise ValueError(
+                    "paged SPMD serving needs a serve-mode Partitioner "
+                    "(Partitioner(..., mode='serve')): training-mode rules "
+                    "shard batch/seq dims the block pool does not have")
+            self._kv_shard = int(getattr(part, "kv_shard", 1))
         # scheduling policy layer: admission order, SLOs, fairness, aging
         self.scheduler = Scheduler(
             sched or cfg.sched_policy,
@@ -343,13 +362,11 @@ class ServeEngine:
                              "layout: dense slots hold no reclaimable blocks")
         self.overlap = cfg.overlap_decode if overlap is None else overlap
         # multi-precision serving (repro.quant): post-load weight
-        # quantization keyed off cfg.weight_dtype — local-only (SPMD graphs
-        # keep the dense master params), applied here so callers need no
-        # separate transform step
+        # quantization keyed off cfg.weight_dtype, applied here so callers
+        # need no separate transform step. Under a serve-mode Partitioner
+        # the quantized params are simply replicated (serve rules shard only
+        # the KV pools), so the combination is fine.
         if cfg.weight_dtype:
-            if part is not None:
-                raise ValueError("weight quantization is local-only: SPMD "
-                                 "serving keeps the dense master params")
             self.params = quantize_params(params, cfg)
         if is_quant_dtype(cfg.kv_dtype):
             if not self.paged:
@@ -406,7 +423,8 @@ class ServeEngine:
                 # helper: the narrower the KV dtype, the more blocks the
                 # same budget admits (dense-equivalent count is the cap)
                 n_blocks = min(
-                    n_blocks_for_bytes(cfg, kv_budget_bytes, self.page_size),
+                    n_blocks_for_bytes(cfg, kv_budget_bytes, self.page_size,
+                                       kv_shard=self._kv_shard),
                     default_n_blocks(max_slots, max_len, self.page_size))
             else:
                 n_blocks = (max_blocks or cfg.max_blocks
@@ -415,7 +433,8 @@ class ServeEngine:
             # pool leaves must be distinguishable from batch-sized leaves,
             # and a pool smaller than the slot count cannot serve anyway
             self.n_blocks = max(n_blocks, max_slots + 1)
-            self.allocator = BlockAllocator(self.n_blocks, self.page_size)
+            self.allocator = BlockAllocator(self.n_blocks, self.page_size,
+                                            n_shards=self._kv_shard)
             if self.prefix_cache:
                 self.prefix_index = PrefixIndex(self.page_size,
                                                 max_cached=self.prefix_lru)
@@ -427,6 +446,16 @@ class ServeEngine:
             self.cache = init_cache(cfg, max_slots, max_len,
                                     n_blocks=self.n_blocks,
                                     page_size=self.page_size)
+            self._cache_shardings = None
+            if part is not None:
+                # place pool leaves sharded by KV head over the model axis,
+                # everything else replicated, and pin the layout so donation
+                # round-trips through the jitted updates keep it stable
+                self._cache_shardings = part.serve_cache_sharding(
+                    self.cache, self.n_blocks)
+                self.cache = jax.device_put(self.cache, self._cache_shardings)
+                self.params = jax.device_put(
+                    self.params, part.params_sharding(self.params))
             pool = kv_bytes(self.cache, pool_n_blocks=self.n_blocks)
             self._block_kv_bytes = pool // self.n_blocks
             # ring buffers / recurrent-adjacent dense KV still charge per slot
@@ -437,8 +466,35 @@ class ServeEngine:
             self.n_blocks = 0
             self.block_tables = None
             self.cache = init_cache(cfg, max_slots, max_len)
+            self._cache_shardings = None
             self._block_kv_bytes = 0
             self._slot_kv_bytes = kv_bytes(self.cache) // max_slots
+        # disaggregated prefill/decode pools: the first ``prefill_slots``
+        # slots chunk-prefill only; completed prompts hand their KV off to a
+        # decode-pool slot purely by republishing pages through the block
+        # table (a host-side int32 row copy — zero tensor traffic).
+        self.split_pools = (cfg.split_pools if split_pools is None
+                            else split_pools)
+        n_pre = (cfg.prefill_slots if prefill_slots is None
+                 else prefill_slots)
+        if self.split_pools:
+            if not self.paged:
+                raise ValueError("split_pools requires the paged layout: "
+                                 "the handoff republishes pool pages")
+            if n_pre <= 0:
+                n_pre = max(1, max_slots // 4)
+            if not 0 < n_pre < max_slots:
+                raise ValueError(
+                    f"prefill_slots must leave both pools non-empty: "
+                    f"{n_pre} of {max_slots} slots")
+        self.prefill_slots = n_pre if self.split_pools else 0
+        #: slot -> pool id (1 = prefill pool, 0 = decode pool / unified)
+        self._slot_pool = np.zeros(max_slots, np.int8)
+        if self.split_pools:
+            self._slot_pool[:self.prefill_slots] = 1
+        #: prefill-pool slots whose prompt is fully written, awaiting a
+        #: decode-pool slot for the block-table handoff
+        self._handoff_ready: set[int] = set()
         # slot bookkeeping (host side)
         self.phase = np.full(max_slots, FREE, np.int8)
         self.slot_uid = np.full(max_slots, -1, np.int64)
@@ -493,8 +549,8 @@ class ServeEngine:
         self._commit_fn = jax.jit(self._commit_slot, donate_argnums=(0,))
         self._chunk_fn = None
         self._copy_fn = jax.jit(
-            lambda cache, src, dst: copy_block(cache, src, dst,
-                                               self.n_blocks),
+            lambda cache, src, dst: self._pin(
+                copy_block(cache, src, dst, self.n_blocks)),
             donate_argnums=(0,))
         self.stats = {"prefills": 0, "decode_steps": 0, "prefill_chunks": 0,
                       "prefill_recompiles": 0, "rejected": 0,
@@ -506,7 +562,9 @@ class ServeEngine:
                       "spec_turns": 0, "spec_proposed": 0,
                       "spec_accepted": 0, "spec_extra_blocks": 0,
                       "forks": 0, "fork_shared_blocks": 0,
-                      "fork_fresh_blocks": 0}
+                      "fork_fresh_blocks": 0,
+                      "handoffs": 0, "handoff_wait_steps": 0,
+                      "decode_gap_steps": 0, "max_concurrency": 0}
         if self._draft_cfg is not None:
             self.draft = DraftWorker(
                 self._draft_cfg, draft_params, max_slots=max_slots,
@@ -539,6 +597,14 @@ class ServeEngine:
     def _tables(self):
         return jnp.asarray(self.block_tables) if self.paged else None
 
+    def _pin(self, cache):
+        """Pin a jitted graph's output cache to the serve shardings so the
+        donation round-trip keeps a stable (sharded-pool) layout across
+        engine steps instead of letting propagation reshard per graph."""
+        if self._cache_shardings is None:
+            return cache
+        return self.part.serve_cache_constraint(cache, self._cache_shardings)
+
     # ---- jitted graphs ------------------------------------------------
     def _decode_all(self, params, cache, tokens, pos, active, tables, temps,
                     topk, topp, keys, ctrs):
@@ -547,7 +613,7 @@ class ServeEngine:
                                     part=self.part, active=active,
                                     block_tables=tables)
         kk = _fold_keys(keys, ctrs, _P_SAMPLE)
-        return _sample(logits[:, 0], temps, topk, topp, kk), cache
+        return _sample(logits[:, 0], temps, topk, topp, kk), self._pin(cache)
 
     def _chunk_step(self, params, cache, tokens, pos, n_valid, slot, tables,
                     temp, topk, topp, key, ctr, first_new):
@@ -557,10 +623,10 @@ class ServeEngine:
         below it come from prefix-shared blocks."""
         logits, cache = extend_step(params, self.cfg, cache, tokens, pos,
                                     n_valid, slot, block_tables=tables,
-                                    first_new_pos=first_new)
+                                    first_new_pos=first_new, part=self.part)
         kk = _fold_keys(key[None], ctr[None], _P_SAMPLE)
         return _sample(logits[:, 0], temp[None], topk[None], topp[None],
-                       kk), cache
+                       kk), self._pin(cache)
 
     def _spec_verify(self, params, cache, feed, draft_toks, draft_probs,
                      pos, n_valid, active, tables, temps, topk, topp, keys,
@@ -573,12 +639,12 @@ class ServeEngine:
         toks = jnp.concatenate([feed, draft_toks], axis=1)
         logits, cache = verify_step(params, self.cfg, cache, toks, pos,
                                     n_valid, active=active,
-                                    block_tables=tables)
+                                    block_tables=tables, part=self.part)
         kk = _fold_keys(keys, ctrs, _P_ACCEPT)
         out, n_acc = speculative_accept(logits, draft_toks, draft_probs,
                                         temps, topk, topp, kk,
                                         n_draft=n_valid - 1)
-        return out, n_acc, cache
+        return out, n_acc, self._pin(cache)
 
     def _commit_slot(self, cache, slot_cache, slot, tables):
         """Write a batch-1 dense prefill cache into slot ``slot`` of the
@@ -706,11 +772,13 @@ class ServeEngine:
                 self.stats["prefix_cow"] += 1
 
     # ---- preemption ----------------------------------------------------
-    def _preempt_for(self, prio: int) -> bool:
+    def _preempt_for(self, prio: int, pool: int | None = None) -> bool:
         """Free resources for a priority-``prio`` arrival: evict one victim
         slot of strictly lower priority (lowest class first, then the most
         recently admitted — the least sunk work). Returns True when anything
         may have freed, so the caller re-checks fit before preempting more.
+        ``pool`` restricts victims to one side of a split-pool engine (a
+        blocked handoff may only evict decode-pool slots).
 
         A pending overlapped decode is flushed first: its in-flight sampled
         ids must land before a victim's generated tokens are folded into its
@@ -724,7 +792,8 @@ class ServeEngine:
         cands = [s for s in range(self.max_slots)
                  if self.phase[s] != FREE and not self._slot_legacy[s]
                  and not self._slot_fork[s]
-                 and self._slot_prio[s] < prio]
+                 and self._slot_prio[s] < prio
+                 and (pool is None or self._slot_pool[s] == pool)]
         if not cands:
             return False
         victim = max(cands, key=lambda s: (-int(self._slot_prio[s]),
@@ -778,6 +847,7 @@ class ServeEngine:
         self.phase[slot] = FREE
         self.slot_uid[slot] = -1
         self._slot_req[slot] = None
+        self._handoff_ready.discard(slot)
         if self.draft is not None:
             self.draft.drop(slot)
         res.preempted += 1
@@ -787,10 +857,13 @@ class ServeEngine:
             seq=int(self._slot_sched_seq[slot]), submit_s=res.submit_s)
 
     # ---- admission -----------------------------------------------------
-    def _free_slot(self) -> int | None:
+    def _free_slot(self, pool: int | None = None) -> int | None:
         for s in range(self.max_slots):
-            if self.phase[s] == FREE:
-                return s
+            if self.phase[s] != FREE:
+                continue
+            if pool is not None and self._slot_pool[s] != pool:
+                continue
+            return s
         return None
 
     def _admit(self):
@@ -819,10 +892,25 @@ class ServeEngine:
                 self._reject(req, f"exceeds max_len: prompt+budget "
                                   f"{n_tokens} tokens > {self.max_len}")
                 continue
+            if (self.part is not None and self.paged
+                    and (self.cfg.encoder is not None
+                         or req.frames is not None
+                         or req.extra_embeds is not None)):
+                # enc-dec / vlm inputs need the dense whole-prompt prefill
+                # path, which commits batch-1 rows the sharded pools cannot
+                # take — reject gracefully instead of crashing the loop
+                ndev = int(getattr(self.part.mesh, "size", 1))
+                self.scheduler.remove(entry)
+                self._reject(
+                    req,
+                    f"unsupported on sharded KV pools: enc-dec/vlm "
+                    f"requests use the dense whole-prompt prefill path, "
+                    f"which does not run over the {ndev}-device serve mesh")
+                continue
             legacy = (self.cfg.encoder is not None
                       or req.frames is not None
                       or req.extra_embeds is not None
-                      or self.part is not None)
+                      or (self.part is not None and not self.paged))
             if legacy and is_quant_dtype(self.cfg.kv_dtype):
                 # the whole-prompt prefill commit writes dense rows —
                 # incompatible with quantized pools
@@ -853,19 +941,33 @@ class ServeEngine:
                         f"capacity {cap} blocks "
                         f"({cap * self._block_kv_bytes} KV bytes)")
                     continue
-            slot = self._free_slot()
+            # split pools: chunked prefills start in the prefill pool
+            # (pool 1) and hand off; legacy whole-prompt requests go
+            # straight to a decode-pool slot (their prefill is synchronous)
+            want_pool = (None if not self.split_pools
+                         else (0 if legacy else 1))
+            slot = self._free_slot(want_pool)
             if slot is None:
-                if self._preempt_for(int(req.priority)):
+                if self._preempt_for(int(req.priority), pool=want_pool):
                     return True              # resources moved: re-plan
                 return False                 # every slot busy: nobody admits
-            if n_par > 1 and int((self.phase == FREE).sum()) < n_par:
-                # the whole fan-out needs slots up front (children are
-                # reserved at admission); no preemption to make room —
-                # fan-outs wait rather than evict
-                self.scheduler.note_skip(entry)
-                if fcfs or self.scheduler.reserved(entry):
-                    return False
-                continue
+            if n_par > 1:
+                if self.split_pools:
+                    # children and the parent's eventual handoff all land
+                    # in the decode pool
+                    short = sum(1 for s in range(self.max_slots)
+                                if self.phase[s] == FREE
+                                and self._slot_pool[s] == 0) < n_par
+                else:
+                    short = int((self.phase == FREE).sum()) < n_par
+                if short:
+                    # the whole fan-out needs slots up front (children are
+                    # reserved at admission); no preemption to make room —
+                    # fan-outs wait rather than evict
+                    self.scheduler.note_skip(entry)
+                    if fcfs or self.scheduler.reserved(entry):
+                        return False
+                    continue
             if self.paged:
                 if not self._admit_paged(entry, slot, n_tokens, legacy):
                     if fcfs or self.scheduler.reserved(entry):
@@ -1008,8 +1110,10 @@ class ServeEngine:
         req = entry.req
         res = self.results[req.uid]
         kids: list[int] = []
+        pool = 0 if self.split_pools else None
         for i in range(int(req.n) - 1):
-            cs = self._free_slot()    # guaranteed by the admission count
+            # guaranteed by the admission count (decode pool when split)
+            cs = self._free_slot(pool)
             cuid = self._next_child_uid
             self._next_child_uid -= 1
             cres = Result(uid=cuid, submit_s=res.submit_s)
@@ -1167,6 +1271,16 @@ class ServeEngine:
                 if n_full:
                     self.prefix_index.publish(
                         prompt, self.slot_blocks[slot][:n_full])
+            if self.split_pools and self._slot_pool[slot] == 1:
+                # disaggregated handoff: children fork off the shared pages
+                # now (they already hold decode-pool slots), then the
+                # parent's prompt KV moves pools purely by republishing its
+                # pages through the block table
+                if self._slot_children.get(slot):
+                    self._fork_children(slot, req)
+                self._handoff_ready.add(slot)
+                self._try_handoffs()
+                continue
             self.phase[slot] = DECODE
             if self._slot_children.get(slot):
                 # fork before the parent can finish: children must map the
@@ -1174,6 +1288,60 @@ class ServeEngine:
                 self._fork_children(slot, req)
             self._finish_prefill(slot, int(self._slot_first[slot]),
                                  len(prompt))
+
+    # ---- disaggregated prefill/decode pools ----------------------------
+    def _move_slot(self, src: int, dst: int) -> None:
+        """Relocate a request between slots. The KV handoff is the block-
+        table row copy: pages stay exactly where they are in the (possibly
+        mesh-sharded) pool, the destination slot simply republishes them —
+        zero tensor traffic on any mesh. Refcounts are untouched: the
+        blocks change owner, not reference count."""
+        self.block_tables[dst, :] = self.block_tables[src, :]
+        self.block_tables[src, :] = 0
+        self.slot_blocks[dst] = self.slot_blocks[src]
+        self.slot_blocks[src] = []
+        for arr in (self.phase, self.slot_uid, self.slot_pos,
+                    self.slot_budget, self.slot_temp, self.slot_topk,
+                    self.slot_topp, self._slot_ctr, self._slot_feed,
+                    self._prefill_off, self._first_new, self._t0,
+                    self._slot_legacy, self._slot_prio, self._slot_seq,
+                    self._slot_sched_seq, self._slot_tok0, self._slot_fork,
+                    self._slot_base_pages, self._slot_first):
+            arr[dst] = arr[src]
+        self._slot_key[dst] = self._slot_key[src]
+        self._slot_req[dst] = self._slot_req[src]
+        self._slot_req[src] = None
+        if src in self._slot_children:
+            self._slot_children[dst] = self._slot_children.pop(src)
+        if self.draft is not None and self.draft.off[src] >= 0:
+            # the draft's dense cache row moves with the request
+            self.draft.fork_slot(src, dst)
+            self.draft.drop(src)
+        self.phase[src] = FREE
+        self.slot_uid[src] = -1
+        self._slot_fork[src] = False
+
+    def _try_handoffs(self) -> None:
+        """Move each prefill-pool slot whose prompt KV is fully written
+        into a decode-pool slot (evicting a strictly-lower-priority decode
+        slot when preemption allows). A blocked handoff counts wait steps
+        instead of stalling the engine — the prefill slot stays parked
+        until a decode slot frees."""
+        for src in sorted(self._handoff_ready):
+            dst = self._free_slot(pool=0)
+            if dst is None and self._preempt_for(
+                    int(self._slot_prio[src]), pool=0):
+                dst = self._free_slot(pool=0)
+            if dst is None:
+                self.stats["handoff_wait_steps"] += 1
+                continue
+            self._handoff_ready.discard(src)
+            req = self._slot_req[src]
+            self._move_slot(src, dst)
+            self.phase[dst] = DECODE
+            self.stats["handoffs"] += 1
+            self._finish_prefill(dst, int(self._slot_first[dst]),
+                                 len(req.prompt))
 
     def _emitted(self, slot: int) -> int:
         """Tokens emitted in this admission segment (synced to host)."""
@@ -1211,6 +1379,7 @@ class ServeEngine:
         self.slot_uid[slot] = -1
         self._slot_req[slot] = None
         self._prefilling.pop(slot, None)
+        self._handoff_ready.discard(slot)
         if self.draft is not None:
             self.draft.drop(slot)
         self._slot_fork[slot] = False
@@ -1319,6 +1488,10 @@ class ServeEngine:
             dtoks, dprobs = self.draft.propose(
                 jnp.asarray(feed0), jnp.asarray(feed1), pos, active, temps,
                 topk, topp, keys, ctrs)
+            if self.part is not None:
+                # the draft runs single-device; re-materialize its outputs
+                # host-side so the mesh-sharded verify graph can place them
+                dtoks, dprobs = np.asarray(dtoks), np.asarray(dprobs)
             out, n_acc, self.cache = self._spec_fn(
                 self.params, self.cache, jnp.asarray(feed1), dtoks, dprobs,
                 pos, n_valid, active, self._tables(), temps, topk, topp,
@@ -1369,6 +1542,15 @@ class ServeEngine:
         skip = self._spec_turn() if self.draft is not None else None
         prev = self._pending
         self._pending = self._dispatch_decode(prev, skip=skip)
+        did = (self._pending is not None
+               or (skip is not None and bool(skip.any())))
+        if not did and (bool(self.scheduler) or bool(self._handoff_ready)):
+            # requests are queued or parked awaiting handoff but no decode
+            # was issued: the decode side sat idle this step. In a unified
+            # engine this gap grows with prompt length (prefill occupies
+            # the slots); split pools keep it flat — the gate the
+            # throughput benchmark checks.
+            self.stats["decode_gap_steps"] += 1
         if prev is not None:
             self._sync(prev)
         if not self.overlap and self._pending is not None:
@@ -1451,8 +1633,11 @@ class ServeEngine:
 
     # ---- engine loop ---------------------------------------------------
     def step(self) -> int:
-        """Admit, advance prefill chunks, one decode step. Returns #busy."""
+        """Admit, retry parked handoffs, advance prefill chunks, one decode
+        step. Returns #busy."""
         self._admit()
+        if self._handoff_ready:
+            self._try_handoffs()
         self._prefill_chunks()
         self._decode()
         if self.prefix_index is not None:
@@ -1465,7 +1650,15 @@ class ServeEngine:
                 self.prefix_index.n_evictable(self.allocator)
                 * self._block_kv_bytes)
         self.stats["sched_skips"] = self.scheduler.stats["skips"]
-        return int((self.phase != FREE).sum())
+        n_busy = int((self.phase != FREE).sum())
+        self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
+                                            n_busy)
+        # per-device KV footprint: pool bytes divide across kv_shard
+        # devices (dense per-slot leaves are replicated, but all-full
+        # paged configs have none)
+        self.stats["kv_bytes_alloc_dev"] = (
+            self.stats["kv_bytes_alloc"] // max(self._kv_shard, 1))
+        return n_busy
 
     def _busy(self) -> bool:
         return (bool(self.scheduler) or bool((self.phase != FREE).any())

@@ -120,6 +120,12 @@ class PrefixIndex:
         blocks a request *matched* from the index re-register under their
         existing entry, and concurrent cold duplicates stay un-indexed (they
         free normally at finish). Returns the number of new entries.
+
+        Mesh note: block ids are *global* under SPMD serving — every shard
+        of a KV-head-sharded pool holds its slice of the same block row, so
+        one index entry is valid on every device and a prefix hit (or a
+        prefill->decode pool handoff) never moves tensor bytes, it only
+        republishes ids through block tables.
         """
         n = 0
         prev = None

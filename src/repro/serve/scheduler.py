@@ -84,7 +84,7 @@ class Scheduler:
         self._entries: list[SchedEntry] = []
         self._seq = 0
         self._service: dict[Any, int] = {}      # user -> admitted tokens
-        self.stats = {"skips": 0, "aged": 0}
+        self.stats = {"skips": 0, "aged": 0, "requeues": 0}
 
     # ---- queue management -------------------------------------------------
     def __len__(self) -> int:
@@ -107,6 +107,7 @@ class Scheduler:
         """Re-enter a preempted request at its original place in line."""
         e = SchedEntry(req, seq, submit_s)
         self._entries.append(e)
+        self.stats["requeues"] += 1
         return e
 
     def remove(self, entry: SchedEntry) -> None:

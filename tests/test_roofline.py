@@ -63,6 +63,40 @@ def test_analyze_costs_bottleneck():
     assert roof["roofline_fraction"] == pytest.approx(1.0)
 
 
+def test_d2d_serve_decode_term():
+    """KV-head-sharded decode: the d2d floor is the attention-output
+    all-gather plus sampled ids, scaled by (N-1)/N; 1-way shards are free;
+    analyze_costs only grows a fourth term when the bytes are passed."""
+    from repro.configs import get_arch, reduced
+    from repro.core.memfloor import d2d_bytes_serve_decode
+
+    cfg = reduced(get_arch("qwen3-0.6b"))
+    assert d2d_bytes_serve_decode(cfg, 8, 1)["total"] == 0.0
+
+    d4 = d2d_bytes_serve_decode(cfg, 8, 4)
+    n_attn = sum(1 for sp in cfg.all_layers()
+                 if sp.mixer in ("full", "local"))
+    want = 8 * cfg.n_heads * cfg.resolved_head_dim * 2 * n_attn * 0.75
+    assert d4["attn_out_allgather"] == pytest.approx(want)
+    assert d4["sampled_ids"] == pytest.approx(8 * 4 * 0.75)
+    assert d4["total"] == pytest.approx(want + 8 * 4 * 0.75)
+    # more shards move more bytes per device ((N-1)/N grows), never fewer
+    d8 = d2d_bytes_serve_decode(cfg, 8, 8)
+    assert d8["total"] > d4["total"]
+
+    base = dict(flops_per_dev=1e12, bytes_per_dev=1e9,
+                collective_bytes_per_dev=0.0, collectives={},
+                arch="qwen3-0.6b", shape="decode_32k", n_chips=4)
+    r = analyze_costs(**base)
+    assert "d2d_s" not in r["roofline"]
+    r2 = analyze_costs(**base, d2d_bytes_per_dev=d4["total"])
+    assert r2["roofline"]["d2d_s"] == pytest.approx(
+        d4["total"] / CHIP.ici_link_bw)
+    # a d2d-dominated step flips the bottleneck
+    r3 = analyze_costs(**base, d2d_bytes_per_dev=1e12)
+    assert r3["roofline"]["bottleneck"] == "d2d"
+
+
 def test_model_flops_formulas():
     """6·N·D for training; gemma2 train_4k ≈ 6 × 27.2e9 × 1.05e6 tokens."""
     mf = model_flops("gemma2-27b", "train_4k")
