@@ -11,6 +11,55 @@ ROOT = Path(__file__).resolve().parents[1]
 SRC = str(ROOT / "src")
 OUTDIR = ROOT / "experiments" / "bench"
 
+#: flattened per-run summary columns (benchmarks.run --metrics-dir)
+METRICS_SUMMARY_COLS = (
+    "suite", "tokens", "steps", "wall_s", "tok_per_s", "mfu", "hbm_util",
+    "d2d_util", "decode_steps", "prefills", "prefix_hits", "preemptions",
+    "spec_accepted", "blocks_granted", "blocks_released")
+
+
+def metrics_path(suite: str) -> Path:
+    """Where a suite's metrics-report JSON lands: ``REPRO_METRICS_DIR``
+    (set by ``benchmarks.run --metrics-dir``) or experiments/bench/."""
+    out = Path(os.environ.get("REPRO_METRICS_DIR") or OUTDIR)
+    out.mkdir(parents=True, exist_ok=True)
+    return out / f"{suite}.metrics.json"
+
+
+def emit_metrics(suite: str, engine, extra: dict | None = None) -> dict:
+    """Write a suite's engine metrics + utilization in the one shared
+    schema (repro-metrics-report-v1) every serve benchmark and the
+    launcher emit."""
+    from repro.obs import utilization_report, write_metrics_json
+    return write_metrics_json(str(metrics_path(suite)), suite=suite,
+                              snapshot=engine.metrics.snapshot(),
+                              utilization=utilization_report(engine),
+                              extra=extra)
+
+
+def summarize_metrics(payload: dict) -> dict:
+    """One flat CSV row from a repro-metrics-report-v1 payload."""
+    snap = payload.get("snapshot", {})
+    c = snap.get("counters", {})
+    u = payload.get("utilization", {})
+    return {
+        "suite": payload.get("suite", ""),
+        "tokens": u.get("tokens", ""),
+        "steps": u.get("steps", ""),
+        "wall_s": u.get("wall_s", ""),
+        "tok_per_s": u.get("tok_per_s", ""),
+        "mfu": u.get("mfu", ""),
+        "hbm_util": u.get("hbm_util", ""),
+        "d2d_util": u.get("d2d_util", ""),
+        "decode_steps": c.get("decode_steps", ""),
+        "prefills": c.get("prefills", ""),
+        "prefix_hits": c.get("prefix_hits", ""),
+        "preemptions": c.get("preemptions", ""),
+        "spec_accepted": c.get("spec_accepted", ""),
+        "blocks_granted": c.get("blocks_granted", ""),
+        "blocks_released": c.get("blocks_released", ""),
+    }
+
 
 def timeit(fn, *args, n: int = 3, warmup: int = 1, **kw) -> tuple:
     import jax

@@ -25,7 +25,7 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit
+from benchmarks._util import emit, emit_metrics
 
 SYS_LEN = 112      # shared system prompt: 14 pages at page_size 8
 PAGE = 8
@@ -85,11 +85,10 @@ def main(dry_run: bool = False) -> None:
                              prefix_cache=(mode == "warm"))
         # warm the jit caches on BOTH engines (and, for `warm`, the prefix
         # index) before the timed runs, so the ratio measures serving work,
-        # not compilation
+        # not compilation. Post-warm counters come off a registry snapshot:
+        # each attempt's delta() isolates its own run, no hand-differencing
         engine.run([Request(uid=99, prompt=sys_prompt, max_new_tokens=2)])
-        kv0 = engine.stats["kv_bytes_alloc"]
-        ch0 = engine.stats["prefill_chunks"]
-        hits0 = engine.stats["prefix_hits"]
+        snap_warm = engine.metrics.snapshot()
         # best-of-3 timing damps shared-runner noise; the deterministic
         # counters (chunks, bytes, hits) come from the first attempt, and
         # greedy outputs must agree across every attempt
@@ -103,16 +102,18 @@ def main(dry_run: bool = False) -> None:
             assert all(r.finish_reason == "length" for r in results)
             toks = [r.tokens for r in results]
             if attempt == 0:
+                d = engine.metrics.snapshot().delta(snap_warm)
                 first = {
-                    "chunks": engine.stats["prefill_chunks"] - ch0,
-                    "hits": engine.stats["prefix_hits"] - hits0,
-                    "hit_tokens": engine.stats["prefix_hit_tokens"],
-                    "kv_per_req": (engine.stats["kv_bytes_alloc"] - kv0)
-                    // len(results),
+                    "chunks": int(d["prefill_chunks"]),
+                    "hits": int(d["prefix_hits"]),
+                    "hit_tokens": int(engine.stats["prefix_hit_tokens"]),
+                    "kv_per_req": int(d["kv_bytes_alloc"]) // len(results),
                 }
                 tokens[mode] = toks
             assert toks == tokens[mode], "greedy outputs drifted across runs"
             best_dt = min(best_dt, dt)
+        if mode == "warm":
+            emit_metrics("prefix_cache", engine, extra={"mode": mode})
         new_tokens = sum(len(t) for t in tokens[mode])
         cached = (engine.prefix_index.n_evictable(engine.allocator)
                   if engine.prefix_index is not None else 0)

@@ -13,9 +13,42 @@ breakage in seconds.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+from pathlib import Path
+
+
+def _collect_metrics(metrics_dir: str) -> None:
+    """Append one flat CSV row per suite metrics-report found in
+    ``metrics_dir`` to experiments/bench/metrics_runs.csv (header written
+    once; rows accumulate across harness runs)."""
+    from benchmarks._util import METRICS_SUMMARY_COLS, OUTDIR, \
+        summarize_metrics
+    rows = []
+    for p in sorted(Path(metrics_dir).glob("*.metrics.json")):
+        try:
+            payload = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[metrics] skipping {p.name}: {e}")
+            continue
+        if payload.get("schema") != "repro-metrics-report-v1":
+            print(f"[metrics] skipping {p.name}: wrong schema")
+            continue
+        rows.append(summarize_metrics(payload))
+    if not rows:
+        print(f"[metrics] no suite reports under {metrics_dir}")
+        return
+    out = OUTDIR / "metrics_runs.csv"
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    lines = [] if out.exists() else [",".join(METRICS_SUMMARY_COLS)]
+    lines += [",".join(str(r.get(c, "")) for c in METRICS_SUMMARY_COLS)
+              for r in rows]
+    with open(out, "a") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[metrics] appended {len(rows)} suite rows to {out}")
 
 
 def main() -> None:
@@ -25,7 +58,15 @@ def main() -> None:
                     help="skip table1 (512-device compiles) unless cached")
     ap.add_argument("--dry-run", action="store_true",
                     help="import suites + registry and exit without running")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="collect each suite's metrics-report JSON here and "
+                         "append one summary CSV row per suite to "
+                         "experiments/bench/metrics_runs.csv")
     args = ap.parse_args()
+    if args.metrics_dir:
+        # suites resolve their report path through _util.metrics_path
+        os.makedirs(args.metrics_dir, exist_ok=True)
+        os.environ["REPRO_METRICS_DIR"] = args.metrics_dir
 
     from benchmarks import (fig4a, fig4b, fig4c, fig7, prefix_cache,
                             quant_accuracy, serve_latency, serve_throughput,
@@ -60,6 +101,8 @@ def main() -> None:
             failures.append(name)
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    if args.metrics_dir:
+        _collect_metrics(args.metrics_dir)
     if failures:
         sys.exit(f"benchmark failures: {failures}")
     print("all benchmarks passed")

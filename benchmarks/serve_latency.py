@@ -27,7 +27,7 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit
+from benchmarks._util import emit, emit_metrics
 
 SLOTS, PAGE, BLOCKS, MAX_LEN = 2, 8, 9, 64
 CHAT_SLO_MS = 1e9   # classification threshold only; wall-clock is machine-
@@ -134,9 +134,12 @@ def main(dry_run: bool = False) -> None:
     rows, tokens, p99 = [], {}, {}
     for variant in ("fcfs", "priority", "preempt"):
         engine = _build_engine(cfg, params, variant)
+        # registry snapshots over the replay window, not raw stats reads
+        snap0 = engine.metrics.snapshot()
         t0 = time.perf_counter()
         steps = _replay(engine, trace)
         wall = time.perf_counter() - t0
+        d = engine.metrics.snapshot().delta(snap0)
         results = [engine.results[r.uid] for _, r in trace]
         assert all(r.finish_reason == "length" for r in results), variant
         tokens[variant] = {r.uid: r.tokens for r in results}
@@ -148,7 +151,10 @@ def main(dry_run: bool = False) -> None:
         for (_, req), res in zip(trace, results):
             by_user[req.user].append(res.ttft_s)
         p99[variant] = _pct(by_user["chat"], 99)
-        met = engine.stats["slo_met"]
+        met = d["slo_met"]
+        if variant == "preempt":
+            emit_metrics("serve_latency", engine,
+                         extra={"variant": variant, "steps": steps})
         rows.append({
             "variant": variant,
             "requests": len(results),
@@ -157,11 +163,10 @@ def main(dry_run: bool = False) -> None:
             "chat_ttft_p50_ms": round(_pct(by_user["chat"], 50) * 1e3, 1),
             "chat_ttft_p99_ms": round(p99[variant] * 1e3, 1),
             "batch_ttft_p50_ms": round(_pct(by_user["batch"], 50) * 1e3, 1),
-            "goodput": round(met / max(met + engine.stats["slo_missed"], 1),
-                             3),
-            "sched_skips": engine.stats["sched_skips"],
-            "preemptions": engine.stats["preemptions"],
-            "prefix_hits": engine.stats["prefix_hits"],
+            "goodput": round(met / max(met + d["slo_missed"], 1), 3),
+            "sched_skips": int(d["sched_skips"]),
+            "preemptions": int(d["preemptions"]),
+            "prefix_hits": int(d["prefix_hits"]),
         })
     emit(rows, "serve_latency")
 

@@ -22,13 +22,14 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit, run_subprocess
+from benchmarks._util import emit, emit_metrics, run_subprocess
 
 _COLS = ("mode", "layout", "devices", "kv_shard", "split_pools",
          "prompt_len", "requests", "new_tokens", "tok_per_s",
          "kv_bytes_per_request", "kv_bytes_per_request_dev",
          "max_concurrency", "decode_gap_steps", "handoffs",
-         "prefill_chunks", "prefill_recompiles", "decode_steps")
+         "prefill_chunks", "prefill_recompiles", "decode_steps",
+         "mfu", "hbm_util")
 
 
 def _row(**kw) -> dict:
@@ -52,6 +53,7 @@ def _layout_rows() -> list[dict]:
 
     from repro.configs import get_arch, reduced
     from repro.models import init
+    from repro.obs import utilization_report
     from repro.serve import Request, ServeEngine
 
     cfg = reduced(get_arch("qwen3-0.6b")).replace(
@@ -68,25 +70,33 @@ def _layout_rows() -> list[dict]:
                              prefill_chunk=16)
         trace = [Request(uid=r.uid, prompt=r.prompt,
                          max_new_tokens=r.max_new_tokens) for r in reqs]
+        # counters come off registry snapshots (delta over the run), not
+        # hand-differenced stats-dict reads
+        snap0 = engine.metrics.snapshot()
         t0 = time.perf_counter()
         results = engine.run(trace)
         dt = time.perf_counter() - t0
+        d = engine.metrics.snapshot().delta(snap0)
+        util = utilization_report(engine)
         new_tokens = sum(len(r.tokens) for r in results)
         tokens[layout] = [r.tokens for r in results]
+        if layout == "paged":
+            emit_metrics("serve_throughput", engine,
+                         extra={"mode": "layout", "wall_s": round(dt, 3)})
         rows.append(_row(
             mode="layout", layout=layout, devices=1, kv_shard=1,
             split_pools=False, requests=len(results),
             new_tokens=new_tokens, tok_per_s=round(new_tokens / dt, 1),
-            kv_bytes_per_request=(engine.stats["kv_bytes_alloc"]
-                                  // len(results)),
-            kv_bytes_per_request_dev=(engine.stats["kv_bytes_alloc_dev"]
+            kv_bytes_per_request=int(d["kv_bytes_alloc"]) // len(results),
+            kv_bytes_per_request_dev=(int(d["kv_bytes_alloc_dev"])
                                       // len(results)),
-            max_concurrency=engine.stats["max_concurrency"],
-            decode_gap_steps=engine.stats["decode_gap_steps"],
-            handoffs=engine.stats["handoffs"],
-            prefill_chunks=engine.stats["prefill_chunks"],
-            prefill_recompiles=engine.stats["prefill_recompiles"],
-            decode_steps=engine.stats["decode_steps"]))
+            max_concurrency=int(d["max_concurrency"]),
+            decode_gap_steps=int(d["decode_gap_steps"]),
+            handoffs=int(d["handoffs"]),
+            prefill_chunks=int(d["prefill_chunks"]),
+            prefill_recompiles=int(d["prefill_recompiles"]),
+            decode_steps=int(d["decode_steps"]),
+            mfu=util["mfu"], hbm_util=util["hbm_util"]))
 
     dense, paged = rows
     assert tokens["paged"] == tokens["dense"], \
@@ -239,15 +249,108 @@ def _gap_rows() -> list[dict]:
     return rows
 
 
+def _trace_smoke(trace_out: str, metrics_out: str) -> None:
+    """CI trace smoke: drive a compact mixed trace — prefix hits, a
+    preemption, a COW fork, split-pool handoffs, and a speculative-decode
+    turn — with the lifecycle tracer enabled, then validate the exported
+    Chrome trace (every admitted request closes its ``request`` span, no
+    orphan begin/end pairs) and round-trip the metrics JSON."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models import init
+    from repro.obs import (Snapshot, Tracer, utilization_report,
+                           validate_chrome_trace, write_metrics_json)
+    from repro.serve import Request, ServeEngine
+
+    cfg = reduced(get_arch("qwen3-0.6b")).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    params = init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    tracer = Tracer(buffer=16384)
+
+    # engine A: prefix sharing + preemption + COW fork under one tight pool
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                      page_size=8, max_blocks=7, prefix_cache=True,
+                      preemption=True, tracer=tracer)
+    shared = rng.integers(0, 256, 12).astype(np.int32)
+    for uid in (0, 1):       # identical prompts: the second is a warm hit
+        eng.submit(Request(uid=uid, prompt=shared.copy(), max_new_tokens=6))
+    for _ in range(4):
+        eng.step()
+    eng.submit(Request(uid=2, prompt=rng.integers(0, 256, 8).astype(np.int32),
+                       max_new_tokens=4, priority=5))  # forces a preemption
+    steps = 0
+    while eng._busy():
+        eng.step()
+        steps += 1
+        assert steps < 5000, "smoke trace failed to drain"
+    eng.run([Request(uid=3, prompt=shared.copy(), max_new_tokens=4,
+                     temperature=0.8, seed=1, n=2)])   # COW fork
+    assert eng.stats["prefix_hits"] >= 1, "no prefix hit in the smoke trace"
+    assert eng.stats["preemptions"] >= 1, "no preemption in the smoke trace"
+    assert eng.stats["forks"] >= 1, "no fork in the smoke trace"
+
+    # engine B: disaggregated prefill/decode pools (handoff events)
+    eng_b = ServeEngine(cfg, params, max_slots=4, max_len=64, paged=True,
+                        page_size=8, split_pools=True, prefill_slots=2,
+                        tracer=tracer)
+    eng_b.run([Request(uid=10 + i,
+                       prompt=rng.integers(0, 256, 10).astype(np.int32),
+                       max_new_tokens=4) for i in range(3)])
+    assert eng_b.stats["handoffs"] >= 1, "no handoff in the smoke trace"
+
+    # engine C: speculative decoding (self-draft: every proposal accepts)
+    eng_c = ServeEngine(cfg, params, max_slots=2, max_len=64, paged=True,
+                        page_size=8, draft_model=cfg, draft_params=params,
+                        spec_k=3, tracer=tracer)
+    eng_c.run([Request(uid=20,
+                       prompt=rng.integers(0, 256, 8).astype(np.int32),
+                       max_new_tokens=6)])
+    assert eng_c.stats["spec_turns"] >= 1, "no spec turn in the smoke trace"
+
+    tracer.export(trace_out)
+    with open(trace_out) as f:
+        summary = validate_chrome_trace(json.load(f))
+    assert summary["requests"] >= 7, summary   # 5 submitted + 2 fork children
+
+    payload = write_metrics_json(metrics_out, suite="serve_throughput.smoke",
+                                 snapshot=eng.metrics.snapshot(),
+                                 utilization=utilization_report(eng))
+    with open(metrics_out) as f:
+        back = json.load(f)
+    assert back["schema"] == "repro-metrics-report-v1"
+    rt = Snapshot.from_json(json.dumps(back["snapshot"]))
+    assert rt == eng.metrics.snapshot(), "metrics JSON round-trip drifted"
+    assert payload["utilization"]["steps"] > 0
+    print(f"trace smoke OK: {summary['events']} events, "
+          f"{summary['requests']} closed request spans, "
+          f"{summary['dropped']} dropped -> {trace_out}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=0,
                     help="also run the SPMD scale-out comparison: a "
                          "subprocess pair (1 vs N fake devices) under the "
                          "same per-device KV budget")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="run the mixed-trace tracing smoke (prefix hits, "
+                         "preemption, fork, split pools, spec decode) and "
+                         "validate the exported trace instead of the full "
+                         "benchmark")
+    ap.add_argument("--trace-out", default="/tmp/serve_trace.json",
+                    help="Chrome-trace output path for --dry-run")
+    ap.add_argument("--metrics-out", default="/tmp/serve_metrics.json",
+                    help="metrics-report output path for --dry-run")
     # parse_known_args: benchmarks.run invokes suite mains with run.py's own
     # argv still in sys.argv — ignore its flags instead of erroring
     args, _ = ap.parse_known_args(argv)
+
+    if args.dry_run:
+        _trace_smoke(args.trace_out, args.metrics_out)
+        return
 
     rows = _layout_rows()
     rows += _gap_rows()

@@ -30,7 +30,7 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit
+from benchmarks._util import emit, emit_metrics
 from benchmarks.quant_accuracy import _train_bigram
 
 PAGE = 8
@@ -115,9 +115,11 @@ def main(dry_run: bool = False) -> None:
     for mode in ("plain", "spec"):
         engine = build(mode == "spec")
         # warm every jitted graph before the timed runs so the ratio
-        # measures serving work, not compilation
+        # measures serving work, not compilation; the post-warm registry
+        # snapshot isolates the timed runs' counters via delta()
         engine.run([Request(uid=99, prompt=reqs[0].prompt.copy(),
                             max_new_tokens=4)])
+        snap_warm = engine.metrics.snapshot()
         best_dt = float("inf")
         for attempt in range(3):
             trace = [Request(uid=r.uid, prompt=r.prompt,
@@ -130,23 +132,25 @@ def main(dry_run: bool = False) -> None:
             tokens.setdefault(mode, toks)
             assert toks == tokens[mode], "greedy outputs drifted across runs"
             best_dt = min(best_dt, dt)
+        d = engine.metrics.snapshot().delta(snap_warm)
         new_tokens = sum(len(t) for t in tokens[mode])
         assert engine.allocator.n_live == 0
         assert (engine.allocator.n_free + engine.allocator.n_evictable
                 == engine.allocator.capacity), "block leak"
-        proposed = engine.stats["spec_proposed"]
+        if mode == "spec":
+            emit_metrics("spec_decode", engine, extra={"spec_k": SPEC_K})
         rows.append({
             "mode": mode,
             "requests": len(reqs),
             "new_tokens": new_tokens,
             "tok_per_s": round(new_tokens / best_dt, 1),
             "spec_k": SPEC_K if mode == "spec" else 0,
-            "spec_turns": engine.stats["spec_turns"],
-            "accept_rate": (round(engine.stats["spec_accepted"]
-                                  / max(proposed, 1), 3)
+            "spec_turns": int(d["spec_turns"]),
+            "accept_rate": (round(d["spec_accepted"]
+                                  / max(d["spec_proposed"], 1), 3)
                             if mode == "spec" else None),
             "train_loss": round(loss if mode == "plain" else dloss, 4),
-            "kv_bytes_alloc": engine.stats["kv_bytes_alloc"],
+            "kv_bytes_alloc": int(d["kv_bytes_alloc"]),
             "kv_bytes_single": None,
             "fork_shared_blocks": None,
         })

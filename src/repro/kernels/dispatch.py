@@ -429,7 +429,10 @@ class OpRegistry:
         names, var_kw = self._signature(impl.fn)
         if not var_kw:
             call_kw = {k: v for k, v in call_kw.items() if k in names}
-        return impl.fn(*args, **call_kw)
+        # the chosen impl shows up by name in profiler timelines (Perfetto /
+        # jax.profiler), so a trace answers "which kernel actually ran?"
+        with jax.named_scope(f"repro.{op}.{impl.name}"):
+            return impl.fn(*args, **call_kw)
 
 
 #: Process-wide registry. ``repro.kernels.ops`` populates it at import.

@@ -130,6 +130,17 @@ def main(argv=None):
     ap.add_argument("--prefill-slots", type=int, default=None,
                     help="prefill-pool size under --split-pools "
                          "(default: cfg.prefill_slots, 0 = slots // 4)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine's full metrics snapshot plus the "
+                         "utilization report as JSON "
+                         "(schema repro-metrics-report-v1)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the request-lifecycle tracer and export "
+                         "Chrome-trace JSON here (load in "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="tracer ring-buffer capacity in events; overflow "
+                         "drops oldest and is counted in the export")
     args = ap.parse_args(argv)
 
     if args.devices > 1:
@@ -179,7 +190,11 @@ def main(argv=None):
                            StrategyConfig(name="ramora",
                                           tensor_parallel=True),
                            cfg, mode="serve")
-    engine = ServeEngine(cfg, params, max_slots=args.slots,
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(buffer=args.trace_buffer)
+    engine = ServeEngine(cfg, params, max_slots=args.slots, tracer=tracer,
                          max_len=args.max_len, seed=args.seed, part=part,
                          kernel_backend=args.kernel_backend,
                          paged=args.paged, page_size=args.page_size,
@@ -224,7 +239,20 @@ def main(argv=None):
     # under the KV-head shard (zeros on one device / replicated pools)
     from repro.core.memfloor import d2d_bytes_serve_decode
     from repro.core.topology import CHIP
+    from repro.obs import utilization_report, write_metrics_json
     d2d = d2d_bytes_serve_decode(cfg, engine.max_slots, engine._kv_shard)
+    # measured-window utilization: MFU + bandwidth fractions joined from
+    # the engine's decode_window_* metrics and the memfloor model
+    util = utilization_report(engine)
+    if args.metrics_out:
+        write_metrics_json(args.metrics_out, suite="launch.serve",
+                           snapshot=engine.metrics.snapshot(),
+                           utilization=util,
+                           extra={"arch": cfg.name,
+                                  "requests": len(results),
+                                  "wall_s": round(dt, 3)})
+    if tracer is not None:
+        tracer.export(args.trace_out)
     print(json.dumps({
         "arch": cfg.name, "requests": len(results),
         "completed": sum(1 for r in results if r.finish_reason),
@@ -251,6 +279,7 @@ def main(argv=None):
                                      // max(len(results), 1)),
         "d2d_bytes_per_step_dev": round(d2d["total"], 1),
         "d2d_s_floor_per_step": d2d["total"] / CHIP.ici_link_bw,
+        "utilization": util,
         "split_pools": engine.split_pools,
         "prefill_slots": engine.prefill_slots,
         "handoffs": engine.stats["handoffs"],

@@ -1,0 +1,28 @@
+"""Serving observability: metrics registry, lifecycle tracer, utilization.
+
+See docs/observability.md for the metrics schema, trace event catalogue,
+and the utilization methodology.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               Snapshot, StatsView)
+from repro.obs.report import (decode_utilization, utilization_report,
+                              windows_from_trace, write_metrics_json)
+from repro.obs.trace import (NULL_TRACER, NullTracer, Tracer,
+                             validate_chrome_trace)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Snapshot",
+    "StatsView",
+    "Tracer",
+    "decode_utilization",
+    "utilization_report",
+    "validate_chrome_trace",
+    "windows_from_trace",
+    "write_metrics_json",
+]

@@ -1,0 +1,424 @@
+"""Typed metrics registry for the serving stack.
+
+Three instrument kinds — :class:`Counter` (monotonic), :class:`Gauge`
+(set-to-latest), :class:`Histogram` (bucketed observations) — live in a
+:class:`MetricsRegistry`. Instruments are get-or-create by name so several
+components (engine, allocator, prefix index, scheduler) can share one
+registry and converge on the same counter object (e.g. ``prefix_evictions``
+is created by the engine and incremented by the index).
+
+Reading happens through :meth:`MetricsRegistry.snapshot`: an immutable
+:class:`Snapshot` supports ``snap[name]`` lookup, ``later.delta(earlier)``
+(counters/histograms difference, gauges take the later value), and lossless
+JSON round-trip (``to_json`` / ``Snapshot.from_json``). ``to_prometheus``
+emits the text exposition format.
+
+Backward compatibility with the historical ``ServeEngine.stats`` dict is
+provided by :class:`StatsView`, a ``MutableMapping`` over the registry's
+scalar instruments: ``stats["prefills"] += 1``, ``dict(engine.stats)``,
+and per-key equality all keep working. Components whose legacy dicts used
+short keys (``Scheduler.stats["skips"]``) get a view with *aliases* mapping
+the legacy key to the registered metric name.
+"""
+from __future__ import annotations
+
+import json
+from collections.abc import MutableMapping
+from dataclasses import dataclass, field
+from typing import Any, Iterator, Mapping
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Snapshot",
+    "StatsView",
+]
+
+# default histogram bucket upper bounds (seconds-ish scale); +inf is implicit
+DEFAULT_BUCKETS = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+
+def _label_key(labels: Mapping[str, str]) -> tuple[tuple[str, str], ...]:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _series_name(name: str, key: tuple[tuple[str, str], ...]) -> str:
+    if not key:
+        return name
+    inner = ",".join(f"{k}={v}" for k, v in key)
+    return f"{name}{{{inner}}}"
+
+
+class _Instrument:
+    kind = "?"
+
+    def __init__(self, name: str, help: str = "", labelnames: tuple[str, ...] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+
+    def _check_labels(self, labels: Mapping[str, str]) -> None:
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"{self.kind} {self.name!r} expects labels "
+                f"{sorted(self.labelnames)}, got {sorted(labels)}")
+
+
+class Counter(_Instrument):
+    """Monotonically non-decreasing count, optionally per label set."""
+
+    kind = "counter"
+
+    def __init__(self, name, help="", labelnames=()):
+        super().__init__(name, help, labelnames)
+        self._values: dict[tuple[tuple[str, str], ...], float] = {}
+        if not self.labelnames:
+            self._values[()] = 0.0
+
+    def inc(self, n: float = 1.0, **labels: str) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease")
+        self._check_labels(labels)
+        key = _label_key(labels)
+        # float() strips numpy scalar types so exports stay JSON-clean
+        self._values[key] = self._values.get(key, 0.0) + float(n)
+
+    @property
+    def value(self) -> float:
+        if self.labelnames:
+            raise ValueError(f"counter {self.name!r} is labeled; read series")
+        return self._values[()]
+
+    def _assign(self, v: float) -> None:
+        # StatsView assignment path: monotonicity is still enforced
+        if self.labelnames:
+            raise ValueError(f"counter {self.name!r} is labeled")
+        if v < self._values[()]:
+            raise ValueError(
+                f"counter {self.name!r} cannot be set backwards "
+                f"({self._values[()]} -> {v})")
+        self._values[()] = float(v)
+
+    def series(self) -> dict[str, float]:
+        return {_series_name(self.name, k): v for k, v in self._values.items()}
+
+
+class Gauge(_Instrument):
+    """Point-in-time value; ``set`` overwrites, ``inc`` adjusts."""
+
+    kind = "gauge"
+
+    def __init__(self, name, help="", labelnames=()):
+        super().__init__(name, help, labelnames)
+        self._values: dict[tuple[tuple[str, str], ...], float] = {}
+        if not self.labelnames:
+            self._values[()] = 0.0
+
+    def set(self, v: float, **labels: str) -> None:
+        self._check_labels(labels)
+        self._values[_label_key(labels)] = float(v)
+
+    def inc(self, n: float = 1.0, **labels: str) -> None:
+        self._check_labels(labels)
+        key = _label_key(labels)
+        self._values[key] = self._values.get(key, 0.0) + float(n)
+
+    @property
+    def value(self) -> float:
+        if self.labelnames:
+            raise ValueError(f"gauge {self.name!r} is labeled; read series")
+        return self._values[()]
+
+    def _assign(self, v: float) -> None:
+        self.set(v)
+
+    def series(self) -> dict[str, float]:
+        return {_series_name(self.name, k): v for k, v in self._values.items()}
+
+
+class Histogram(_Instrument):
+    """Cumulative-bucket histogram with count and sum, per label set."""
+
+    kind = "histogram"
+
+    def __init__(self, name, help="", labelnames=(), buckets=DEFAULT_BUCKETS):
+        super().__init__(name, help, labelnames)
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError(f"histogram {self.name!r} needs >= 1 bucket")
+        self._series: dict[tuple[tuple[str, str], ...], dict[str, Any]] = {}
+        if not self.labelnames:
+            self._series[()] = self._blank()
+
+    def _blank(self) -> dict[str, Any]:
+        return {"count": 0, "sum": 0.0, "buckets": [0] * len(self.buckets)}
+
+    def observe(self, v: float, **labels: str) -> None:
+        self._check_labels(labels)
+        key = _label_key(labels)
+        s = self._series.setdefault(key, self._blank())
+        s["count"] += 1
+        s["sum"] += float(v)
+        for i, le in enumerate(self.buckets):
+            if v <= le:
+                s["buckets"][i] += 1
+
+    def series(self) -> dict[str, dict[str, Any]]:
+        out = {}
+        for key, s in self._series.items():
+            out[_series_name(self.name, key)] = {
+                "count": s["count"],
+                "sum": s["sum"],
+                "buckets": {str(le): n
+                            for le, n in zip(self.buckets, s["buckets"])},
+            }
+        return out
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """Immutable point-in-time read of a registry.
+
+    ``counters``/``gauges`` map series name -> value; ``histograms`` map
+    series name -> ``{"count", "sum", "buckets": {le: n}}``.
+    """
+
+    counters: Mapping[str, float] = field(default_factory=dict)
+    gauges: Mapping[str, float] = field(default_factory=dict)
+    histograms: Mapping[str, Mapping[str, Any]] = field(default_factory=dict)
+
+    def __getitem__(self, name: str) -> Any:
+        for table in (self.counters, self.gauges, self.histograms):
+            if name in table:
+                return table[name]
+        raise KeyError(name)
+
+    def __contains__(self, name: str) -> bool:
+        return (name in self.counters or name in self.gauges
+                or name in self.histograms)
+
+    def get(self, name: str, default: Any = None) -> Any:
+        try:
+            return self[name]
+        except KeyError:
+            return default
+
+    def delta(self, earlier: "Snapshot") -> "Snapshot":
+        """Change since ``earlier``: counters and histogram count/sum/buckets
+        subtract (series absent earlier count from zero); gauges take the
+        later value — a gauge has no meaningful difference."""
+        counters = {k: v - earlier.counters.get(k, 0.0)
+                    for k, v in self.counters.items()}
+        hists = {}
+        for k, s in self.histograms.items():
+            e = earlier.histograms.get(k, {"count": 0, "sum": 0.0,
+                                           "buckets": {}})
+            hists[k] = {
+                "count": s["count"] - e["count"],
+                "sum": s["sum"] - e["sum"],
+                "buckets": {le: n - e["buckets"].get(le, 0)
+                            for le, n in s["buckets"].items()},
+            }
+        return Snapshot(counters=counters, gauges=dict(self.gauges),
+                        histograms=hists)
+
+    def as_dict(self) -> dict:
+        return {
+            "schema": "repro-metrics-v1",
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "histograms": {k: {"count": v["count"], "sum": v["sum"],
+                               "buckets": dict(v["buckets"])}
+                           for k, v in self.histograms.items()},
+        }
+
+    def to_json(self, **dump_kw) -> str:
+        return json.dumps(self.as_dict(), sort_keys=True, **dump_kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Snapshot":
+        d = json.loads(text)
+        if d.get("schema") != "repro-metrics-v1":
+            raise ValueError(f"not a metrics snapshot: {d.get('schema')!r}")
+        return cls(counters=d["counters"], gauges=d["gauges"],
+                   histograms=d["histograms"])
+
+    def __eq__(self, other: Any) -> bool:
+        if not isinstance(other, Snapshot):
+            return NotImplemented
+        return (dict(self.counters) == dict(other.counters)
+                and dict(self.gauges) == dict(other.gauges)
+                and {k: dict(v, buckets=dict(v["buckets"]))
+                     for k, v in self.histograms.items()}
+                == {k: dict(v, buckets=dict(v["buckets"]))
+                    for k, v in other.histograms.items()})
+
+
+class MetricsRegistry:
+    """Name -> instrument store with typed get-or-create accessors."""
+
+    def __init__(self):
+        self._instruments: dict[str, _Instrument] = {}
+
+    def _get_or_create(self, cls, name, help, labelnames, **kw):
+        inst = self._instruments.get(name)
+        if inst is None:
+            inst = cls(name, help=help, labelnames=labelnames, **kw)
+            self._instruments[name] = inst
+            return inst
+        if not isinstance(inst, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {inst.kind}, "
+                f"requested {cls.kind}")
+        if tuple(labelnames) != inst.labelnames:
+            raise ValueError(
+                f"metric {name!r} labelnames mismatch: "
+                f"{inst.labelnames} vs {tuple(labelnames)}")
+        return inst
+
+    def counter(self, name: str, help: str = "",
+                labels: tuple[str, ...] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: tuple[str, ...] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: tuple[str, ...] = (),
+                  buckets=DEFAULT_BUCKETS) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels,
+                                   buckets=buckets)
+
+    def get(self, name: str) -> _Instrument | None:
+        return self._instruments.get(name)
+
+    def instruments(self) -> list[_Instrument]:
+        return list(self._instruments.values())
+
+    # ---- reading ---------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        counters: dict[str, float] = {}
+        gauges: dict[str, float] = {}
+        hists: dict[str, Any] = {}
+        for inst in self._instruments.values():
+            if isinstance(inst, Counter):
+                counters.update(inst.series())
+            elif isinstance(inst, Gauge):
+                gauges.update(inst.series())
+            elif isinstance(inst, Histogram):
+                hists.update(inst.series())
+        return Snapshot(counters=counters, gauges=gauges, histograms=hists)
+
+    def to_json(self, **dump_kw) -> str:
+        return self.snapshot().to_json(**dump_kw)
+
+    def to_prometheus(self, prefix: str = "repro_") -> str:
+        """Prometheus text exposition format (v0.0.4)."""
+        lines: list[str] = []
+        for inst in self._instruments.values():
+            base = f"{prefix}{inst.name}"
+            suffix = "_total" if isinstance(inst, Counter) else ""
+            if inst.help:
+                lines.append(f"# HELP {base}{suffix} {inst.help}")
+            lines.append(f"# TYPE {base}{suffix} {inst.kind}")
+            if isinstance(inst, Histogram):
+                for key, s in inst._series.items():
+                    lbl = ",".join(f'{k}="{v}"' for k, v in key)
+                    cum = 0
+                    for le, n in zip(inst.buckets, s["buckets"]):
+                        cum = n  # buckets are already cumulative
+                        q = f'{lbl},le="{le:g}"' if lbl else f'le="{le:g}"'
+                        lines.append(f"{base}_bucket{{{q}}} {cum}")
+                    q = f'{lbl},le="+Inf"' if lbl else 'le="+Inf"'
+                    lines.append(f"{base}_bucket{{{q}}} {s['count']}")
+                    amid = f"{{{lbl}}}" if lbl else ""
+                    lines.append(f"{base}_sum{amid} {s['sum']:g}")
+                    lines.append(f"{base}_count{amid} {s['count']}")
+                continue
+            for key, v in inst._values.items():
+                lbl = ",".join(f'{k}="{v2}"' for k, v2 in key)
+                amid = f"{{{lbl}}}" if lbl else ""
+                lines.append(f"{base}{suffix}{amid} {v:g}")
+        return "\n".join(lines) + "\n"
+
+    def view(self, aliases: Mapping[str, str] | None = None,
+             names: tuple[str, ...] | None = None) -> "StatsView":
+        return StatsView(self, aliases=aliases, names=names)
+
+
+def _as_scalar(v: float):
+    """Legacy stats consumers expect ints for counts; keep floats float."""
+    return int(v) if float(v).is_integer() else v
+
+
+class StatsView(MutableMapping):
+    """Dict-compatible live view over a registry's scalar instruments.
+
+    With ``aliases`` only, the view exposes exactly the alias keys (legacy
+    short names -> registered metric names). Otherwise it exposes every
+    unlabeled Counter/Gauge in the registry (plus any aliases). Assignment
+    routes to ``Gauge.set`` or the monotonicity-checked counter setter, so
+    ``stats[k] += 1`` behaves exactly like the historical dict.
+    """
+
+    def __init__(self, registry: MetricsRegistry,
+                 aliases: Mapping[str, str] | None = None,
+                 names: tuple[str, ...] | None = None):
+        self._registry = registry
+        self._aliases = dict(aliases or {})
+        self._names = tuple(names) if names is not None else None
+        # aliases-only views are closed over the alias keys; otherwise open
+        self._open = aliases is None and names is None
+
+    def _resolve(self, key: str) -> _Instrument:
+        name = self._aliases.get(key, key)
+        inst = self._registry.get(name)
+        if inst is None or isinstance(inst, Histogram) or inst.labelnames:
+            raise KeyError(key)
+        if not self._open and key not in self._keys():
+            raise KeyError(key)
+        return inst
+
+    def _keys(self) -> list[str]:
+        if self._names is not None:
+            keys = list(self._names) + [a for a in self._aliases
+                                        if a not in self._names]
+        elif self._aliases and not self._open:
+            keys = list(self._aliases)
+        else:
+            keys = [n for n, inst in self._registry._instruments.items()
+                    if not isinstance(inst, Histogram)
+                    and not inst.labelnames]
+            keys += [a for a in self._aliases if a not in keys]
+        return keys
+
+    def __getitem__(self, key: str):
+        return _as_scalar(self._resolve(key).value)
+
+    def __setitem__(self, key: str, value) -> None:
+        self._resolve(key)._assign(float(value))
+
+    def __delitem__(self, key: str) -> None:
+        raise TypeError("metrics cannot be deleted through the stats view")
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._keys())
+
+    def __len__(self) -> int:
+        return len(self._keys())
+
+    def __contains__(self, key) -> bool:
+        try:
+            self._resolve(key)
+            return True
+        except KeyError:
+            return False
+
+    def __repr__(self) -> str:
+        return f"StatsView({dict(self)!r})"

@@ -78,6 +78,8 @@ from repro.models import decode_step, extend_step, forward, logits_fn, \
     verify_step
 from repro.models.cache import copy_block, default_n_blocks, init_cache, \
     kv_bytes, n_blocks_for_bytes, pages_per_slot
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.quant import is_quant_dtype, quantize_params
 from repro.serve.prefix import PrefixIndex, page_hashes
 from repro.serve.scheduler import Scheduler
@@ -173,7 +175,18 @@ class BlockAllocator:
     so a partial failure never leaks blocks.
     """
 
-    def __init__(self, n_blocks: int, page_size: int, n_shards: int = 1):
+    def __init__(self, n_blocks: int, page_size: int, n_shards: int = 1,
+                 metrics=None):
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # conservation invariant (tests/test_allocator_props.py):
+        # blocks_granted - blocks_released == n_live + cached
+        self._c_granted = self.metrics.counter(
+            "blocks_granted", "blocks removed from the free list by alloc()")
+        self._c_released = self.metrics.counter(
+            "blocks_released", "blocks returned to the free list")
+        self._c_adopted = self.metrics.counter(
+            "blocks_adopted", "cached blocks revived to live by incref()")
         self.n_blocks = n_blocks
         self.page_size = page_size
         #: mesh shards the pool tensors are split over (serve-mode KV-head
@@ -237,6 +250,7 @@ class BlockAllocator:
                 self.ref[blk] = 0
                 self._free.append(blk)
             raise
+        self._c_granted.inc(len(got))
         return got
 
     def incref(self, block: int) -> None:
@@ -246,6 +260,7 @@ class BlockAllocator:
         if (self.evictor is not None and self.ref[block] == 0
                 and self.evictor.is_cached(block)):
             self.evictor.note_adopted(block)     # cached -> live
+            self._c_adopted.inc()
         self.ref[block] += 1
 
     def decref(self, block: int, *, retain: bool = False) -> int:
@@ -259,6 +274,7 @@ class BlockAllocator:
         if r == 0:
             if not retain:
                 self._free.append(block)
+                self._c_released.inc()
             elif self.evictor is not None:
                 self.evictor.note_cached(block)  # live -> cached
         return r
@@ -269,6 +285,7 @@ class BlockAllocator:
             raise RuntimeError(f"freeing live block {block} "
                                f"(refcount {int(self.ref[block])})")
         self._free.append(block)
+        self._c_released.inc()
 
     def release(self, blocks: list[int]) -> None:
         """Drop one reference on each block; blocks pinned by the evictor
@@ -312,11 +329,19 @@ class ServeEngine:
                  draft_params: PyTree | None = None,
                  spec_k: int | None = None,
                  split_pools: bool | None = None,
-                 prefill_slots: int | None = None):
+                 prefill_slots: int | None = None,
+                 metrics: "MetricsRegistry | None" = None,
+                 tracer=None):
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
         self.part = part
+        # observability: one shared metrics registry (allocator, prefix
+        # index, and scheduler register into it) + a lifecycle tracer.
+        # The default NULL_TRACER is a no-op hook — call sites emit
+        # unconditionally, disabled tracing costs one empty method call.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self.paged = cfg.paged_kv if paged is None else paged
         self.page_size = page_size or cfg.page_size
         self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
@@ -355,7 +380,7 @@ class ServeEngine:
         self.scheduler = Scheduler(
             sched or cfg.sched_policy,
             aging_skips=cfg.sched_aging if sched_aging is None
-            else sched_aging)
+            else sched_aging, metrics=self.metrics)
         self.preemption = cfg.preemption if preemption is None else preemption
         if self.preemption and not self.paged:
             raise ValueError("preemption requires the paged (block-pool) "
@@ -434,10 +459,12 @@ class ServeEngine:
             # and a pool smaller than the slot count cannot serve anyway
             self.n_blocks = max(n_blocks, max_slots + 1)
             self.allocator = BlockAllocator(self.n_blocks, self.page_size,
-                                            n_shards=self._kv_shard)
+                                            n_shards=self._kv_shard,
+                                            metrics=self.metrics)
             if self.prefix_cache:
                 self.prefix_index = PrefixIndex(self.page_size,
-                                                max_cached=self.prefix_lru)
+                                                max_cached=self.prefix_lru,
+                                                metrics=self.metrics)
                 self.allocator.evictor = self.prefix_index
             else:
                 self.prefix_index = None
@@ -552,19 +579,69 @@ class ServeEngine:
             lambda cache, src, dst: self._pin(
                 copy_block(cache, src, dst, self.n_blocks)),
             donate_argnums=(0,))
-        self.stats = {"prefills": 0, "decode_steps": 0, "prefill_chunks": 0,
-                      "prefill_recompiles": 0, "rejected": 0,
-                      "kv_bytes_alloc": 0, "kv_bytes_cached": 0,
-                      "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefix_cow": 0, "prefix_evictions": 0,
-                      "preemptions": 0, "sched_skips": 0,
-                      "slo_met": 0, "slo_missed": 0,
-                      "spec_turns": 0, "spec_proposed": 0,
-                      "spec_accepted": 0, "spec_extra_blocks": 0,
-                      "forks": 0, "fork_shared_blocks": 0,
-                      "fork_fresh_blocks": 0,
-                      "handoffs": 0, "handoff_wait_steps": 0,
-                      "decode_gap_steps": 0, "max_concurrency": 0}
+        # the historical ``stats`` dict, rebuilt on the metrics registry:
+        # every legacy key is a registered Counter/Gauge and ``self.stats``
+        # is a dict-compatible live view over the registry (so
+        # ``stats[k] += 1``, ``dict(engine.stats)``, and per-key reads all
+        # behave exactly as before). Counters the scheduler / prefix index
+        # own (``sched_skips``, ``prefix_evictions``) are the *same*
+        # instrument objects — no per-step mirroring.
+        for name, help_ in (
+                ("prefills", "prompts placed into a slot"),
+                ("decode_steps", "decode dispatches (batched steps)"),
+                ("prefill_chunks", "chunked-prefill extend_step dispatches"),
+                ("prefill_recompiles", "distinct compiled prefill shapes"),
+                ("rejected", "requests rejected at submit/admission"),
+                ("kv_bytes_alloc", "KV bytes allocated (global, lifetime)"),
+                ("prefix_hits", "admissions that matched cached prefix pages"),
+                ("prefix_hit_tokens", "prompt tokens skipped via prefix hits"),
+                ("prefix_cow", "copy-on-write block privatizations"),
+                ("prefix_evictions",
+                 "cached blocks reclaimed to the free list"),
+                ("preemptions", "slots evicted for higher-priority arrivals"),
+                ("sched_skips",
+                 "admission passes that overtook a blocked entry"),
+                ("slo_met", "finished requests inside their SLO targets"),
+                ("slo_missed", "finished requests outside their SLO targets"),
+                ("spec_turns", "speculative draft+verify turns"),
+                ("spec_proposed", "draft tokens proposed"),
+                ("spec_accepted", "draft tokens accepted (incl. bonus)"),
+                ("spec_extra_blocks", "blocks granted for spec overflow"),
+                ("forks", "parallel-sampling fork fan-outs"),
+                ("fork_shared_blocks", "prompt blocks shared COW at fork"),
+                ("fork_fresh_blocks", "fresh blocks granted to fork children"),
+                ("handoffs", "prefill->decode pool block-table handoffs"),
+                ("handoff_wait_steps",
+                 "steps a finished prefill waited for a decode slot"),
+                ("decode_gap_steps",
+                 "steps with queued work but no decode dispatched"),
+                ("decode_window_tokens",
+                 "tokens committed inside measured decode windows"),
+                ("decode_window_batch",
+                 "sum over decode dispatches of active slots"),
+                ("decode_window_kv_rows",
+                 "sum over decode dispatches of context rows attended"),
+        ):
+            self.metrics.counter(name, help_)
+        for name, help_ in (
+                ("kv_bytes_cached", "refcount-0 bytes retained by the index"),
+                ("kv_bytes_alloc_dev", "per-device share of kv_bytes_alloc"),
+                ("max_concurrency", "peak concurrently-active slots"),
+        ):
+            self.metrics.gauge(name, help_)
+        self._h_decode_window = self.metrics.histogram(
+            "decode_window_s",
+            "measured wall seconds per engine step that dispatched decode "
+            "work (joined against roofline/memfloor by repro.obs.report)")
+        self._h_spec_accept = self.metrics.histogram(
+            "spec_accept_len", "accepted tokens per speculative turn",
+            buckets=tuple(float(b) for b in range(0, 17)))
+        self._c_win_tokens = self.metrics.counter("decode_window_tokens")
+        self._c_win_batch = self.metrics.counter("decode_window_batch")
+        self._c_win_kv = self.metrics.counter("decode_window_kv_rows")
+        self._c_finished = self.metrics.counter(
+            "finished", "requests finished, by reason", labels=("reason",))
+        self.stats = self.metrics.view()
         if self._draft_cfg is not None:
             self.draft = DraftWorker(
                 self._draft_cfg, draft_params, max_slots=max_slots,
@@ -704,6 +781,11 @@ class ServeEngine:
         self.results[req.uid] = Result(uid=req.uid,
                                        submit_s=time.perf_counter())
         self.scheduler.submit(req)
+        self.trace.begin("request", req.uid,
+                         prompt_tokens=len(req.prompt),
+                         max_new=req.max_new_tokens)
+        self.trace.begin("queue", req.uid)
+        self.trace.event("submit", req.uid)
 
     def stream(self, req: Request, *, max_steps: int = 100000
                ) -> Iterator[int]:
@@ -742,6 +824,9 @@ class ServeEngine:
         res.detail = why
         self._admit_hashes.pop(req.uid, None)
         self.stats["rejected"] += 1
+        self._c_finished.inc(reason="rejected")
+        self.trace.event("reject", req.uid, why=why[:120])
+        self.trace.close_open(req.uid, reason="rejected")
 
     def _cow_pages(self, slot: int, lo: int, hi: int) -> None:
         """Copy-on-write guard before writing positions ``[lo, hi)`` of
@@ -770,6 +855,8 @@ class ServeEngine:
                     self.slot_blocks[slot].index(blk)] = dst
                 self.block_tables[slot, p] = dst
                 self.stats["prefix_cow"] += 1
+                self.trace.event("cow", int(self.slot_uid[slot]), slot=slot,
+                                 page=p)
 
     # ---- preemption ----------------------------------------------------
     def _preempt_for(self, prio: int, pool: int | None = None) -> bool:
@@ -855,6 +942,12 @@ class ServeEngine:
         self.scheduler.requeue(
             dc_replace(req, prompt=new_prompt, max_new_tokens=new_budget),
             seq=int(self._slot_sched_seq[slot]), submit_s=res.submit_s)
+        self.trace.event("preempt", uid, slot=slot, written=written)
+        # phase spans close; the request span stays open across the requeue
+        self.trace.close_open(uid, keep=("request",), slot=slot,
+                              reason="preempted")
+        self.trace.begin("queue", uid)
+        self.trace.event("requeue", uid)
 
     # ---- admission -----------------------------------------------------
     def _free_slot(self, pool: int | None = None) -> int | None:
@@ -865,6 +958,14 @@ class ServeEngine:
                 continue
             return s
         return None
+
+    def _note_skip(self, entry) -> None:
+        """Record an admission pass-over: scheduler aging + trace events."""
+        was = self.scheduler.reserved(entry)
+        self.scheduler.note_skip(entry)
+        self.trace.event("queue_skip", entry.req.uid, skips=entry.skips)
+        if not was and self.scheduler.reserved(entry):
+            self.trace.event("aged", entry.req.uid)
 
     def _admit(self):
         """Fill free slots in scheduler order. A request blocked on pool
@@ -964,7 +1065,7 @@ class ServeEngine:
                     # the whole fan-out needs slots up front (children are
                     # reserved at admission); no preemption to make room —
                     # fan-outs wait rather than evict
-                    self.scheduler.note_skip(entry)
+                    self._note_skip(entry)
                     if fcfs or self.scheduler.reserved(entry):
                         return False
                     continue
@@ -1021,7 +1122,7 @@ class ServeEngine:
             # hand the prefix references back (refcount-0 indexed blocks
             # return to cached, not freed) and note the skip for aging
             self.allocator.release(matched)
-            self.scheduler.note_skip(entry)
+            self._note_skip(entry)
             return False
         try:
             fresh = self.allocator.alloc(need)
@@ -1029,7 +1130,7 @@ class ServeEngine:
             # alloc rolled its partial grant back; hand the prefix
             # references back too — admission leaves no trace
             self.allocator.release(matched)
-            self.scheduler.note_skip(entry)
+            self._note_skip(entry)
             return False
         if cow:
             shared = matched[-1]
@@ -1038,6 +1139,8 @@ class ServeEngine:
                 self.cache, np.int32(shared), np.int32(matched[-1]))
             self.allocator.release([shared])
             self.stats["prefix_cow"] += 1
+            self.trace.event("cow", req.uid, slot=slot,
+                             page=len(matched) - 1)
         blocks = matched + fresh
         self.slot_blocks[slot] = blocks
         self.block_tables[slot, :] = 0
@@ -1080,6 +1183,13 @@ class ServeEngine:
         self._slot_tok0[slot] = len(self.results[req.uid].tokens)
         self._admit_seq += 1
         self.stats["prefills"] += 1
+        self.trace.end("queue", req.uid, slot=slot)
+        self.trace.begin("prefill", req.uid, slot=slot)
+        res = self.results[req.uid]
+        self.trace.event("admit", req.uid, slot=slot,
+                         first_new=int(self._first_new[slot]),
+                         pages=len(self.slot_blocks[slot]),
+                         resumed=res.preempted > 0)
         self.slot_topk[slot] = max(0, int(req.top_k))
         self.slot_topp[slot] = float(req.top_p)
         self._slot_key[slot] = self._request_key(req)
@@ -1119,6 +1229,7 @@ class ServeEngine:
             cres = Result(uid=cuid, submit_s=res.submit_s)
             res.children.append(cres)
             self.results[cuid] = cres
+            self.trace.begin("request", cuid, slot=cs, parent=req.uid)
             self.phase[cs] = PREFILL
             self.slot_uid[cs] = cuid
             self.slot_temp[cs] = req.temperature
@@ -1191,6 +1302,9 @@ class ServeEngine:
             self.stats["fork_shared_blocks"] += w0
             self.stats["fork_fresh_blocks"] += len(fresh)
             self.stats["kv_bytes_alloc"] += len(fresh) * self._block_kv_bytes
+            self.trace.event("fork", int(self.slot_uid[cs]), slot=cs,
+                             parent=req.uid, shared=w0, fresh=len(fresh))
+            self.trace.begin("decode", int(self.slot_uid[cs]), slot=cs)
 
     def _prefill_whole(self, slot: int, req: Request):
         prompt = np.asarray(req.prompt, np.int32)[None]  # (1, S)
@@ -1251,6 +1365,8 @@ class ServeEngine:
                         np.int32(self._first_new[slot]))
                 self._slot_ctr[slot] += 1
                 self.stats["prefill_chunks"] += 1
+                self.trace.event("prefill_chunk", int(self.slot_uid[slot]),
+                                 slot=slot, off=off, n=t)
                 off += t
                 self._prefill_off[slot] = off
                 if off >= len(prompt):
@@ -1334,12 +1450,16 @@ class ServeEngine:
                 dst = self._free_slot(pool=0)
             if dst is None:
                 self.stats["handoff_wait_steps"] += 1
+                self.trace.event("handoff_wait", int(self.slot_uid[src]),
+                                 slot=src)
                 continue
             self._handoff_ready.discard(src)
             req = self._slot_req[src]
             self._move_slot(src, dst)
             self.phase[dst] = DECODE
             self.stats["handoffs"] += 1
+            self.trace.event("handoff", int(self.slot_uid[dst]), slot=dst,
+                             src=src)
             self._finish_prefill(dst, int(self._slot_first[dst]),
                                  len(req.prompt))
 
@@ -1349,7 +1469,10 @@ class ServeEngine:
                 - int(self._slot_tok0[slot]))
 
     def _finish_prefill(self, slot: int, first: int, length: int):
-        res = self.results[self.slot_uid[slot]]
+        uid = int(self.slot_uid[slot])
+        res = self.results[uid]
+        self.trace.end("prefill", uid, slot=slot, length=length)
+        self.trace.begin("decode", uid, slot=slot)
         self._emit(slot, first)
         if res.prefill_s == 0.0:    # resumption keeps the original TTFT
             res.prefill_s = time.perf_counter() - self._t0[slot]
@@ -1361,8 +1484,13 @@ class ServeEngine:
             self._finish(slot, "length")
 
     def _finish(self, slot: int, reason: str):
-        res = self.results[self.slot_uid[slot]]
+        uid = int(self.slot_uid[slot])
+        res = self.results[uid]
         res.finish_reason = reason
+        self._c_finished.inc(reason=reason)
+        self.trace.event("finish", uid, slot=slot, reason=reason,
+                         tokens=len(res.tokens))
+        self.trace.close_open(uid, slot=slot, reason=reason)
         req = self._slot_req[slot]
         if (req is not None and reason in ("eos", "length")
                 and (req.slo_ttft_ms is not None
@@ -1499,6 +1627,11 @@ class ServeEngine:
         out = np.asarray(out)
         n_acc = np.asarray(n_acc)
         self.stats["spec_turns"] += 1
+        nd = int(mask.sum())
+        self._c_win_batch.inc(nd)
+        self._c_win_kv.inc(int(self.slot_pos[mask].sum()) + nd)
+        self.trace.event("spec_propose", n=nd,
+                         kv=int(self.slot_pos[mask].sum()) + nd)
         for slot in np.nonzero(mask)[0]:
             self._slot_ctr[slot] += 1
             req = self._slot_req[slot]
@@ -1527,7 +1660,17 @@ class ServeEngine:
             self.stats["decode_steps"] += 1
             self.slot_pos[slot] += committed
             self.slot_budget[slot] -= committed
+            self._c_win_tokens.inc(committed)
+            self._h_spec_accept.observe(na)
+            self.trace.event("spec_commit", int(self.slot_uid[slot]),
+                             slot=int(slot), proposed=ke, accepted=na,
+                             tokens=committed)
+            n_extra = len(self.slot_blocks[slot])
             self._rollback_spec(slot)
+            n_rolled = n_extra - len(self.slot_blocks[slot])
+            if n_rolled:
+                self.trace.event("spec_rollback", int(self.slot_uid[slot]),
+                                 slot=int(slot), pages=n_rolled)
             if finish is not None:
                 self._finish(slot, finish)
         return mask
@@ -1539,6 +1682,7 @@ class ServeEngine:
         sync after this step's dispatch is already on the device — host
         bookkeeping and the next admission run while the device computes,
         at the cost of ids reaching callbacks one step late."""
+        t0 = time.perf_counter()
         skip = self._spec_turn() if self.draft is not None else None
         prev = self._pending
         self._pending = self._dispatch_decode(prev, skip=skip)
@@ -1556,6 +1700,11 @@ class ServeEngine:
         if not self.overlap and self._pending is not None:
             p, self._pending = self._pending, None
             self._sync(p)
+        if did:
+            # measured decode window: sync-visible wall seconds for one
+            # step that dispatched decode work (repro.obs.report joins
+            # these against the roofline/memfloor model)
+            self._h_decode_window.observe(time.perf_counter() - t0)
 
     def _dispatch_decode(self, prev: _Pending | None,
                          skip: np.ndarray | None = None
@@ -1598,6 +1747,13 @@ class ServeEngine:
                 jnp.asarray((self._slot_ctr & 0x7FFFFFFF).astype(np.uint32)))
         self._slot_ctr[dec] += 1
         self.stats["decode_steps"] += 1
+        # window accounting at dispatch, before pos advances: rows attended
+        # this step = prior context + the token being written per slot
+        nd = int(dec.sum())
+        rows = int(self.slot_pos[dec].sum()) + nd
+        self._c_win_batch.inc(nd)
+        self._c_win_kv.inc(rows)
+        self.trace.event("dispatch", n=nd, kv=rows)
         self.slot_pos[dec] += 1
         self.slot_budget[dec] -= 1
         return _Pending(ids=ids, mask=dec, uids=self.slot_uid.copy())
@@ -1609,6 +1765,7 @@ class ServeEngine:
         flight (an eos discovered one sync earlier) are discarded — their
         slot was dispatched speculatively."""
         ids = np.asarray(p.ids)
+        n_emitted = 0
         for slot in np.nonzero(p.mask)[0]:
             uid = int(p.uids[slot])
             res = self.results.get(uid)
@@ -1617,6 +1774,7 @@ class ServeEngine:
                 continue                    # speculative overflow step
             tok = int(ids[slot])
             self._emit(slot, tok)
+            n_emitted += 1
             res.decode_steps += 1
             if self.eos_id is not None and tok == self.eos_id:
                 self._finish(slot, "eos")
@@ -1624,6 +1782,9 @@ class ServeEngine:
                 # emitted-count check, NOT slot_budget: with overlap the
                 # budget already paid for the next in-flight dispatch
                 self._finish(slot, "length")
+        # tokens become measured throughput only once sync-visible
+        self._c_win_tokens.inc(n_emitted)
+        self.trace.event("sync", n=int(p.mask.sum()), tokens=n_emitted)
 
     def _sync_pending(self):
         """Flush the overlapped decode step, if any (idempotent)."""
@@ -1640,16 +1801,15 @@ class ServeEngine:
             self._try_handoffs()
         self._prefill_chunks()
         self._decode()
+        # (sched_skips / prefix_evictions need no mirroring: the scheduler
+        # and prefix index increment the same registry counters directly)
         if self.prefix_index is not None:
-            self.stats["prefix_evictions"] = \
-                self.prefix_index.stats["evictions"]
             # cached-block accounting: KV bytes held by refcount-0 pages
             # retained for future prefix hits (reclaimable, so they are
             # reported separately from kv_bytes_alloc)
             self.stats["kv_bytes_cached"] = (
                 self.prefix_index.n_evictable(self.allocator)
                 * self._block_kv_bytes)
-        self.stats["sched_skips"] = self.scheduler.stats["skips"]
         n_busy = int((self.phase != FREE).sum())
         self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
                                             n_busy)
@@ -1684,6 +1844,9 @@ class ServeEngine:
             if res is not None and not res.finish_reason:
                 res.finish_reason = "truncated"
                 res.detail = "still queued at max_steps"
+                self._c_finished.inc(reason="truncated")
+                self.trace.event("truncate", entry.req.uid)
+                self.trace.close_open(entry.req.uid, reason="truncated")
 
     def run(self, requests: list[Request], *, max_steps: int = 100000
             ) -> list[Result]:

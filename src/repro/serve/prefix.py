@@ -62,7 +62,8 @@ class PrefixIndex:
     ids; all refcounting goes through the allocator passed into each call.
     """
 
-    def __init__(self, page_size: int, max_cached: int = 0):
+    def __init__(self, page_size: int, max_cached: int = 0, metrics=None):
+        from repro.obs.metrics import MetricsRegistry
         self.page_size = page_size
         self.max_cached = max_cached
         self._h2b: OrderedDict[int, int] = OrderedDict()  # MRU at the end
@@ -70,8 +71,25 @@ class PrefixIndex:
         self._parent: dict[int, int | None] = {}   # chain links (radix edges)
         self._nchild: dict[int, int] = {}
         self._n_cached = 0                         # refcount-0 indexed blocks
-        self.stats = {"hits": 0, "hit_tokens": 0, "misses": 0,
-                      "published": 0, "evictions": 0}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_hits = self.metrics.counter(
+            "prefix_index_hits", "lookups matching >= 1 indexed page")
+        self._c_hit_tokens = self.metrics.counter(
+            "prefix_index_hit_tokens", "prompt tokens served from the index")
+        self._c_misses = self.metrics.counter(
+            "prefix_index_misses", "lookups matching nothing")
+        self._c_published = self.metrics.counter(
+            "prefix_index_published", "new hash->block entries registered")
+        self._c_evictions = self.metrics.counter(
+            "prefix_evictions", "cached blocks reclaimed to the free list")
+        # legacy dict interface: short keys alias the registered names
+        self.stats = self.metrics.view(aliases={
+            "hits": "prefix_index_hits",
+            "hit_tokens": "prefix_index_hit_tokens",
+            "misses": "prefix_index_misses",
+            "published": "prefix_index_published",
+            "evictions": "prefix_evictions",
+        })
 
     def __len__(self) -> int:
         return len(self._h2b)
@@ -106,10 +124,10 @@ class PrefixIndex:
             alloc.incref(blk)
             blocks.append(blk)
         if blocks:
-            self.stats["hits"] += 1
-            self.stats["hit_tokens"] += len(blocks) * self.page_size
+            self._c_hits.inc()
+            self._c_hit_tokens.inc(len(blocks) * self.page_size)
         else:
-            self.stats["misses"] += 1
+            self._c_misses.inc()
         return blocks
 
     def publish(self, tokens, blocks) -> int:
@@ -141,7 +159,7 @@ class PrefixIndex:
                 self._nchild[parent] = self._nchild.get(parent, 0) + 1
             prev = h
             n += 1
-        self.stats["published"] += n
+        self._c_published.inc(n)
         return n
 
     # ------------------------------------------------------------------
@@ -195,7 +213,7 @@ class PrefixIndex:
             self._nchild[parent] -= 1
         self._n_cached -= 1
         alloc.free_block(blk)
-        self.stats["evictions"] += 1
+        self._c_evictions.inc()
         return True
 
     def trim(self, alloc) -> None:

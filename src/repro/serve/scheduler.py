@@ -74,8 +74,11 @@ class Scheduler:
     aging_skips: int = 64
     #: injectable clock for deterministic tests.
     now: Callable[[], float] = time.perf_counter
+    #: shared MetricsRegistry (the engine passes its own); None = private.
+    metrics: Any = None
 
     def __post_init__(self):
+        from repro.obs.metrics import MetricsRegistry
         if self.policy not in POLICIES:
             raise ValueError(f"sched policy {self.policy!r}; "
                              f"expected one of {POLICIES}")
@@ -84,7 +87,20 @@ class Scheduler:
         self._entries: list[SchedEntry] = []
         self._seq = 0
         self._service: dict[Any, int] = {}      # user -> admitted tokens
-        self.stats = {"skips": 0, "aged": 0, "requeues": 0}
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        self._c_skips = self.metrics.counter(
+            "sched_skips", "admission passes that overtook a blocked entry")
+        self._c_aged = self.metrics.counter(
+            "sched_aged", "entries promoted to reserved by skip aging")
+        self._c_requeues = self.metrics.counter(
+            "sched_requeues", "preempted requests re-entering the queue")
+        # legacy dict interface: short keys alias the registered names
+        self.stats = self.metrics.view(aliases={
+            "skips": "sched_skips",
+            "aged": "sched_aged",
+            "requeues": "sched_requeues",
+        })
 
     # ---- queue management -------------------------------------------------
     def __len__(self) -> int:
@@ -107,7 +123,7 @@ class Scheduler:
         """Re-enter a preempted request at its original place in line."""
         e = SchedEntry(req, seq, submit_s)
         self._entries.append(e)
-        self.stats["requeues"] += 1
+        self._c_requeues.inc()
         return e
 
     def remove(self, entry: SchedEntry) -> None:
@@ -157,9 +173,9 @@ class Scheduler:
         """The engine passed over ``entry`` (blocked on pool resources)."""
         was = self.reserved(entry)
         entry.skips += 1
-        self.stats["skips"] += 1
+        self._c_skips.inc()
         if not was and self.reserved(entry):
-            self.stats["aged"] += 1
+            self._c_aged.inc()
 
     def note_admitted(self, entry: SchedEntry, n_tokens: int) -> None:
         """``entry`` was admitted: drop it and charge its tenant's service

@@ -35,8 +35,10 @@ N_BLOCKS = 9          # 8 usable + null block
 
 
 def _mk():
-    alloc = BlockAllocator(N_BLOCKS, PAGE)
-    index = PrefixIndex(PAGE)
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()     # shared: allocator + index co-register
+    alloc = BlockAllocator(N_BLOCKS, PAGE, metrics=reg)
+    index = PrefixIndex(PAGE, metrics=reg)
     alloc.evictor = index
     return alloc, index
 
@@ -69,6 +71,18 @@ def _check_invariants(alloc: BlockAllocator, index: PrefixIndex,
     # the O(1) cached-block counter agrees with a ground-truth scan
     assert index.n_evictable(alloc) == len(cached), \
         "incremental cached-block counter drifted"
+    # metrics conservation: every block the registry counts as granted and
+    # not yet released is exactly one the ground-truth scan sees as live or
+    # cached (adoption moves cached -> live without granting; retention
+    # moves live -> cached without releasing)
+    snap = alloc.metrics.snapshot()
+    assert (snap.counters.get("blocks_granted", 0)
+            - snap.counters.get("blocks_released", 0)
+            == len(live) + len(cached)), "metrics conservation violated"
+    # index-entry conservation: entries only leave the index by eviction
+    assert (snap.counters.get("prefix_index_published", 0) - len(index)
+            == snap.counters.get("prefix_evictions", 0)), \
+        "published/evicted entry accounting drifted"
 
 
 def _run_program(program: list[tuple[int, int]]) -> None:
@@ -90,6 +104,7 @@ def _run_program(program: list[tuple[int, int]]) -> None:
     groups: list[list[int]] = []    # one group per slot-like reference set
     published: list[np.ndarray] = []
     tag = 0
+    gt = {"hits": 0, "hit_tokens": 0, "misses": 0}   # driver's own tally
     owners = lambda: [b for g in groups for b in g]
     for op, arg in program:
         op = op % 10
@@ -144,6 +159,10 @@ def _run_program(program: list[tuple[int, int]]) -> None:
                 hits = index.lookup(published[arg % len(published)], alloc)
                 if hits:
                     groups.append(hits)   # lookup hands back references
+                    gt["hits"] += 1
+                    gt["hit_tokens"] += len(hits) * PAGE
+                else:
+                    gt["misses"] += 1
         elif op == 7:                                 # preempt a whole group
             if groups:
                 g = groups.pop(arg % len(groups))
@@ -179,6 +198,12 @@ def _run_program(program: list[tuple[int, int]]) -> None:
         alloc.release(g)
     _check_invariants(alloc, index, [])
     assert alloc.n_free + index.n_evictable(alloc) == alloc.capacity
+    # the index's registry counters agree with the driver's own tally
+    snap = index.metrics.snapshot()
+    assert snap.counters.get("prefix_index_hits", 0) == gt["hits"]
+    assert snap.counters.get("prefix_index_hit_tokens", 0) \
+        == gt["hit_tokens"]
+    assert snap.counters.get("prefix_index_misses", 0) == gt["misses"]
 
 
 @pytest.mark.property

@@ -702,6 +702,40 @@ def test_streaming_callbacks_and_iterator(setup):
     assert res.token_ts == sorted(res.token_ts)
 
 
+def test_token_ts_stamped_sync_visible(setup):
+    """Pins the timestamp semantics ``Result.token_ts`` / ``ttft_s`` /
+    ``itl_s`` are defined by: a token is stamped (and its ``on_token``
+    callback fires) when the step's sampled ids become host-visible at
+    sync, NOT at dispatch. Under ``overlap`` the next decode step is
+    already in flight when token k surfaces, so the callback observes
+    ``decode_steps == k + 1`` — except the final token, whose slot had no
+    budget left to dispatch (== k). The synchronous loop observes == k."""
+    cfg, params = setup
+    prompt = np.arange(1, 9, dtype=np.int32)
+    for overlap in (False, True):
+        engine = ServeEngine(cfg, params, max_slots=1, max_len=64,
+                             paged=True, page_size=8, overlap=overlap)
+        seen: list[int] = []
+        [res] = engine.run([Request(
+            uid=0, prompt=prompt, max_new_tokens=5,
+            on_token=lambda tok, r, e=engine:
+                seen.append(e.stats["decode_steps"]))])
+        assert res.finish_reason == "length"
+        ts = res.token_ts
+        assert len(ts) == 5 == len(seen)
+        assert ts == sorted(ts)
+        assert res.ttft_s is not None and res.ttft_s > 0
+        assert res.itl_s is not None and res.itl_s > 0
+        # token 0 comes from prefill (no decode dispatched yet)
+        assert seen[0] == 0
+        n_dec = len(seen) - 1
+        if overlap:
+            assert seen[1:] == [k + 1 for k in range(1, n_dec)] + [n_dec], \
+                f"overlap stamps must be sync-visible: {seen}"
+        else:
+            assert seen[1:] == list(range(1, n_dec + 1)), seen
+
+
 def test_slo_accounting(setup):
     """TTFT SLOs classify finished requests into met/missed goodput
     buckets; requests without SLOs stay unclassified."""
