@@ -75,19 +75,43 @@ def timeit(fn, *args, n: int = 3, warmup: int = 1, **kw) -> tuple:
 
 
 def emit(rows: list[dict], name: str) -> None:
-    """Print rows as CSV and persist under experiments/bench/<name>.csv."""
+    """Print rows as CSV and persist under experiments/bench/<name>.csv.
+
+    The header is the ordered union of every row's keys (not just the
+    first row's) — suites that append summary rows with disjoint keys
+    used to render them as all-empty ",,,," lines. Rows whose rendered
+    cells are all empty are dropped rather than written."""
     if not rows:
         print(f"[{name}] no rows")
         return
-    cols = list(rows[0])
+    cols: list[str] = []
+    for r in rows:
+        for c in r:
+            if c not in cols:
+                cols.append(c)
     lines = [",".join(cols)]
     for r in rows:
-        lines.append(",".join(str(r.get(c, "")) for c in cols))
+        cells = [str(r.get(c, "")) for c in cols]
+        if not any(cells):
+            continue
+        lines.append(",".join(cells))
     text = "\n".join(lines)
     print(f"\n=== {name} ===")
     print(text)
     OUTDIR.mkdir(parents=True, exist_ok=True)
     (OUTDIR / f"{name}.csv").write_text(text + "\n")
+
+
+def read_rows(name: str) -> list[dict]:
+    """Read back an ``emit()``-style CSV as dicts, skipping blank/all-empty
+    lines (tolerates trailing ",,,," rows from older emit versions)."""
+    import csv
+    path = OUTDIR / f"{name}.csv"
+    if not path.exists():
+        return []
+    with path.open(newline="") as fh:
+        return [r for r in csv.DictReader(fh)
+                if any(v.strip() for v in r.values() if v is not None)]
 
 
 def run_subprocess(code: str, n_devices: int = 8, timeout: int = 1200) -> str:

@@ -1,17 +1,25 @@
-"""Quantized serving benchmark: int8 weights + int8 paged KV vs bf16.
+"""Quantized serving benchmark: int8/int4 weights + quantized paged KV vs bf16.
 
 The paper's precision ladder made measurable (Occamy's 8-to-64-bit FPU:
-halving precision doubles density — Fig. 4b): one serving trace run twice
-through the paged engine, once at the bf16 baseline and once with
-``weight_dtype=int8, kv_dtype=int8`` (per-channel + per-block absmax
-scales, ``quant_block=32``). Reports tokens/s, weight bytes, KV bytes per
-request, and greedy token agreement, and asserts the directional claims:
+halving precision doubles density — Fig. 4b): one serving trace run three
+times through the paged engine — the bf16 baseline, ``weight_dtype=int8,
+kv_dtype=int8``, and the bottom rung ``weight_dtype=int4, kv_dtype=fp8``
+(two nibbles packed per stored byte; fp8 KV contracted natively in the
+paged-attention kernel with no bf16 page bounce). Per-channel + per-block
+absmax scales, ``quant_block=32`` throughout. Reports tokens/s, weight
+bytes, KV bytes per request, and greedy token agreement, and asserts the
+directional claims:
 
-  * weight bytes <= 0.55x the bf16 baseline (int8 storage + fp16 scales),
-  * KV bytes/request <= 0.55x (int8 pools + per-row fp16 scales),
-  * greedy decode matches the baseline on >= 95% of tokens, measured
-    teacher-forced: per-position argmax agreement along the baseline's
-    generated sequences (free-running agreement is also reported).
+  * int8 weight bytes <= 0.55x the bf16 baseline (int8 storage + fp16
+    scales); int4 <= 0.30x (nibble-packed storage),
+  * int8 KV bytes/request <= 0.55x (int8 pools + per-row fp16 scales),
+  * greedy decode matches the baseline on >= 95% of tokens at every rung,
+    measured teacher-forced: per-position argmax agreement along the
+    baseline's generated sequences (free-running agreement also reported).
+
+Each run's engine telemetry lands in ``quant_accuracy.metrics.json``
+(repro-metrics-report-v1 via ``_util.emit_metrics``) so ``benchmarks.run
+--metrics-dir`` folds this suite into experiments/bench/metrics_runs.csv.
 
 The model is first trained for a few seconds on a deterministic bigram
 task (next token = a fixed random permutation of the current one) so its
@@ -29,7 +37,7 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit
+from benchmarks._util import emit, emit_metrics
 
 TRAIN_STEPS = 60
 TRAIN_LR = 0.5
@@ -129,18 +137,24 @@ def main(dry_run: bool = False) -> None:
     cfg = reduced(get_arch("qwen3-0.6b")).replace(
         n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
         d_ff=256, vocab_size=256, dtype="bfloat16", param_dtype="bfloat16")
-    qcfg = cfg.replace(weight_dtype="int8", kv_dtype="int8", quant_block=32)
+    ladder = (
+        ("bf16", cfg),
+        ("int8", cfg.replace(weight_dtype="int8", kv_dtype="int8",
+                             quant_block=32)),
+        ("int4", cfg.replace(weight_dtype="int4", kv_dtype="fp8",
+                             quant_block=32)),
+    )
     trained, perm, loss = _train_bigram(
         cfg.replace(dtype="float32", param_dtype="float32"))
     print(f"bigram pre-train: {TRAIN_STEPS} steps, final loss {loss:.3f}")
-    # the bf16 *serving* baseline the quantized run is judged against
+    # the bf16 *serving* baseline the quantized runs are judged against
     params = jax.tree.map(
         lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
         trained)
     reqs = _requests(cfg, perm, n=8)
 
-    rows, tokens, engines = [], {}, {}
-    for tag, c in (("bf16", cfg), ("int8", qcfg)):
+    rows, tokens, engines, cfgs = [], {}, {}, {}
+    for tag, c in ladder:
         engine = ServeEngine(c, params, max_slots=3, max_len=64, paged=True,
                              page_size=8, prefill_chunk=8)
         trace = [Request(uid=r.uid, prompt=r.prompt,
@@ -151,6 +165,7 @@ def main(dry_run: bool = False) -> None:
         new_tokens = sum(len(r.tokens) for r in results)
         tokens[tag] = results
         engines[tag] = engine
+        cfgs[tag] = c
         rows.append({
             "precision": tag,
             "requests": len(results),
@@ -161,29 +176,46 @@ def main(dry_run: bool = False) -> None:
                 engine.stats["kv_bytes_alloc"] // len(results),
         })
 
-    base, q = rows
-    w_ratio = q["weight_bytes"] / base["weight_bytes"]
-    kv_ratio = q["kv_bytes_per_request"] / base["kv_bytes_per_request"]
-    tf_match, tf_total = _teacher_forced_match(
-        cfg, engines["bf16"].params, qcfg, engines["int8"].params,
-        reqs, tokens["bf16"])
-    free = sum(int(x == y) for a, b in zip(tokens["bf16"], tokens["int8"])
-               for x, y in zip(a.tokens, b.tokens))
+    base = rows[0]
     free_total = sum(len(a.tokens) for a in tokens["bf16"])
-    for r in rows:
+    ratios: dict[str, dict] = {}
+    for r in rows[1:]:
+        tag = r["precision"]
+        w_ratio = r["weight_bytes"] / base["weight_bytes"]
+        kv_ratio = r["kv_bytes_per_request"] / base["kv_bytes_per_request"]
+        tf_match, tf_total = _teacher_forced_match(
+            cfg, engines["bf16"].params, cfgs[tag], engines[tag].params,
+            reqs, tokens["bf16"])
+        free = sum(int(x == y)
+                   for a, b in zip(tokens["bf16"], tokens[tag])
+                   for x, y in zip(a.tokens, b.tokens))
         r["weight_ratio"] = round(w_ratio, 3)
         r["kv_ratio"] = round(kv_ratio, 3)
         r["token_match"] = round(tf_match / tf_total, 3)
         r["token_match_free_running"] = round(free / free_total, 3)
+        ratios[tag] = {"weight_ratio": r["weight_ratio"],
+                       "kv_ratio": r["kv_ratio"],
+                       "token_match": r["token_match"]}
     emit(rows, "quant_accuracy")
+    # fold this suite into the shared telemetry stream (metrics_runs.csv)
+    emit_metrics("quant_accuracy", engines["int4"],
+                 extra={"precision_ladder": ratios})
 
-    assert w_ratio <= 0.55, (
-        f"int8 weight bytes should be <= 0.55x bf16: got {w_ratio:.3f}")
-    assert kv_ratio <= 0.55, (
-        f"int8 KV bytes/request should be <= 0.55x bf16: got {kv_ratio:.3f}")
-    assert tf_match / tf_total >= 0.95, (
-        f"greedy decode should match bf16 on >= 95% of tokens: got "
-        f"{tf_match}/{tf_total} = {tf_match / tf_total:.3f}")
+    i8, i4 = ratios["int8"], ratios["int4"]
+    assert i8["weight_ratio"] <= 0.55, (
+        f"int8 weight bytes should be <= 0.55x bf16: got "
+        f"{i8['weight_ratio']:.3f}")
+    assert i8["kv_ratio"] <= 0.55, (
+        f"int8 KV bytes/request should be <= 0.55x bf16: got "
+        f"{i8['kv_ratio']:.3f}")
+    assert i4["weight_ratio"] <= 0.30, (
+        f"packed int4 weight bytes should be <= 0.30x bf16: got "
+        f"{i4['weight_ratio']:.3f}")
+    for tag in ("int8", "int4"):
+        tm = ratios[tag]["token_match"]
+        assert tm >= 0.95, (
+            f"{tag} greedy decode should match bf16 on >= 95% of tokens: "
+            f"got {tm:.3f}")
 
 
 if __name__ == "__main__":

@@ -70,12 +70,12 @@ def main() -> None:
 
     from benchmarks import (fig4a, fig4b, fig4c, fig7, prefix_cache,
                             quant_accuracy, serve_latency, serve_throughput,
-                            spec_decode, table1)
+                            sparse_gemm, spec_decode, table1)
     suites = {"fig4a": fig4a.main, "fig4b": fig4b.main, "fig4c": fig4c.main,
               "fig7": fig7.main, "prefix": prefix_cache.main,
               "quant": quant_accuracy.main, "serve": serve_throughput.main,
-              "latency": serve_latency.main, "spec": spec_decode.main,
-              "table1": table1.main}
+              "latency": serve_latency.main, "sparse": sparse_gemm.main,
+              "spec": spec_decode.main, "table1": table1.main}
     if args.only:
         keep = args.only.split(",")
         suites = {k: v for k, v in suites.items() if k in keep}

@@ -117,9 +117,15 @@ class ModelConfig:
     # the paged KV block pools at the narrow width with per-row scales
     # (paged layout only — dense buffers keep ``dtype``). Serving-side
     # knobs: training always uses the dense master params.
-    weight_dtype: str = ""        # "" | int8 | fp8 | float8_e4m3fn
+    # ``weight_dtype`` additionally accepts "int4" (nibble-packed, weight-
+    # only: KV pools stay byte-addressable). ``weight_density`` is the
+    # structured-sparsity fraction of weight blocks kept nonzero (1.0 =
+    # dense) — a cost-model knob consumed by the memfloor/roofline byte and
+    # FLOP terms for gemm_sparse serving paths.
+    weight_dtype: str = ""        # "" | int8 | fp8 | float8_e4m3fn | int4
     kv_dtype: str = ""            # "" | int8 | fp8 | float8_e4m3fn
     quant_block: int = 0          # 0 => per-channel; else scale-block length
+    weight_density: float = 1.0   # (0, 1] nonzero weight-block fraction
     remat: str = "block"          # none | block (remat each scanned block)
     scan_unroll: int = 1          # block-scan unroll factor. Analysis builds
                                   # lower u=1 and u=2 and extrapolate, since
@@ -226,13 +232,18 @@ class ModelConfig:
         if self.prefill_slots < 0:
             raise ValueError("prefill_slots must be >= 0 (0 = auto)")
         _quant_names = ("", "int8", "fp8", "float8_e4m3fn")
-        for field_name in ("weight_dtype", "kv_dtype"):
-            if getattr(self, field_name) not in _quant_names:
-                raise ValueError(
-                    f"{field_name}={getattr(self, field_name)!r}; expected "
-                    f"one of {_quant_names}")
+        # int4 is weight-only: KV pool rows must stay byte-addressable
+        if self.weight_dtype not in _quant_names + ("int4",):
+            raise ValueError(
+                f"weight_dtype={self.weight_dtype!r}; expected one of "
+                f"{_quant_names + ('int4',)}")
+        if self.kv_dtype not in _quant_names:
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r}; expected one of {_quant_names}")
         if self.quant_block < 0:
             raise ValueError("quant_block must be >= 0")
+        if not 0.0 < self.weight_density <= 1.0:
+            raise ValueError("weight_density must be in (0, 1]")
         if self.attention_impl not in self._ATTENTION_IMPL_MAP:
             raise ValueError(
                 f"attention_impl={self.attention_impl!r}; expected 'xla', "

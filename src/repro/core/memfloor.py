@@ -36,8 +36,11 @@ from repro.core.roofline import traffic_dtype_bytes
 
 def _weight_traffic_bytes(cfg: ModelConfig, fallback: float = 2.0) -> float:
     """Per-element HBM width of the weight stream: quantized serving
-    (cfg.weight_dtype) reads int8/fp8 storage, else the compute width."""
-    return traffic_dtype_bytes(cfg.weight_dtype, fallback)
+    (cfg.weight_dtype) reads storage width (int8/fp8 = 1, packed int4 =
+    0.5), else the compute width. ``cfg.weight_density`` < 1 discounts the
+    stream further — block-pruned weights (gemm_sparse) only move their
+    kept blocks through HBM."""
+    return traffic_dtype_bytes(cfg.weight_dtype, fallback) * cfg.weight_density
 
 
 def _kv_traffic_bytes(cfg: ModelConfig, fallback: float = 2.0) -> float:

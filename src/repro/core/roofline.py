@@ -46,6 +46,38 @@ def traffic_dtype_bytes(name: str, fallback: float = 2.0) -> float:
     return float(dtype_bytes(name))
 
 
+def sparse_gemm_terms(m: int, k: int, n: int, *, density: float = 1.0,
+                      weight_bytes_elem: float = 2.0,
+                      act_bytes_elem: float = 2.0,
+                      mask_block: tuple[int, int] | None = None) -> dict:
+    """Analytic FLOP/byte terms for one (block-)sparse GEMM ``(M,K)@(K,N)``.
+
+    ``density`` is the kept fraction of weight blocks (1.0 = dense, 0.5 =
+    2:4). FLOPs and the weight stream scale linearly with it — a skipped
+    block is neither multiplied nor fetched — while activations and the
+    output are dense either way. ``mask_block`` adds the (tiny) metadata
+    stream: one byte per (bs_k, bs_n) block for a block mask, or for 2:4
+    pass ``mask_block=None`` and the K/2×N int8 index plane is folded into
+    ``weight_bytes``. Used by benchmarks/sparse_gemm.py to check that the
+    measured kernel cost actually tracks density.
+    """
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    flops = 2.0 * m * k * n * density
+    weight_bytes = k * n * weight_bytes_elem * density
+    mask_bytes = 0.0
+    if mask_block is not None:
+        bs_k, bs_n = mask_block
+        mask_bytes = math.ceil(k / bs_k) * math.ceil(n / bs_n) * 1.0
+    act_bytes = m * k * act_bytes_elem
+    out_bytes = m * n * act_bytes_elem
+    total = weight_bytes + mask_bytes + act_bytes + out_bytes
+    return {"flops": flops, "weight_bytes": weight_bytes,
+            "mask_bytes": mask_bytes, "act_bytes": act_bytes,
+            "out_bytes": out_bytes, "total_bytes": total,
+            "intensity": flops / total if total else 0.0}
+
+
 def _shape_bytes(shape_str: str) -> int:
     """'f32[16,128]' -> bytes. '(f32[..], u8[..])' handled by caller."""
     total = 0

@@ -3,10 +3,16 @@
 Same schedule as the dense ``gemm`` kernel (gemm.py): grid
 ``(M/bm, N/bn, K/bk)`` with K innermost and a VMEM fp32 accumulator — the
 Occamy cluster recipe (C1) — but the weight operand streams through HBM at
-its *storage* width (int8 or fp8-e4m3, half/quarter the bf16 bytes: the
-paper's precision-halving bandwidth double) and is dequantized **in-tile**,
-right after the DMA, the way Ogopogo's in-stream DMA ops (C5b) apply
-elementwise work during the transfer.
+its *storage* width (int8, fp8-e4m3, or nibble-packed int4: half / quarter /
+eighth the bf16 bytes — the paper's precision-halving bandwidth double) and
+is dequantized **in-tile**, right after the DMA, the way Ogopogo's in-stream
+DMA ops (C5b) apply elementwise work during the transfer.
+
+``pack=2`` selects the int4 layout: the weight operand is ``(K/2, N)`` int8
+bytes carrying two codes each (lo nibble = even K row, hi = odd), the tile
+crosses HBM at half-byte-per-element width, and the kernel sign-extends the
+nibbles with a shift pair before the dequant multiply — unpack happens in
+VMEM, never in HBM.
 
 Scales arrive pre-gathered per K-tile: the wrapper (ops.py) turns the
 ``(n_blocks, N)`` per-block scales into ``(n_k_tiles, N)`` rows — one row
@@ -24,16 +30,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _dequant_tile(q_ref, s_ref, pack: int):
+    """(bk/pack, bn) storage tile -> (bk, bn) fp32 weight tile."""
+    q = q_ref[...]
+    if pack == 2:
+        # sign-extending nibble unpack: lo via shift-up/arith-shift-down,
+        # hi via arithmetic shift; interleave restores the logical K order
+        lo = (q << 4).astype(jnp.int8) >> 4
+        hi = q >> 4
+        q = jnp.stack([lo, hi], axis=1).reshape(q.shape[0] * 2, q.shape[1])
+    return q.astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+
+
 def _wq_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k: int, scale: float,
-               act: str | None, out_dtype):
+               act: str | None, out_dtype, pack: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # in-tile dequant: the (bk, bn) weight tile crossed HBM at storage width
-    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    # in-tile dequant: the weight tile crossed HBM at storage width
+    w = _dequant_tile(q_ref, s_ref, pack)
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
 
@@ -50,14 +68,14 @@ def _wq_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k: int, scale: float,
 
 
 def _wq_bias_kernel(x_ref, q_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
-                    scale: float, act: str | None, out_dtype):
+                    scale: float, act: str | None, out_dtype, pack: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    w = _dequant_tile(q_ref, s_ref, pack)
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
 
@@ -74,37 +92,41 @@ def _wq_bias_kernel(x_ref, q_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
 def gemm_wq(x, qw, tile_scales, *, bias=None, scale: float = 1.0,
             act: str | None = None, block_m: int = 128, block_n: int = 128,
             block_k: int = 128, out_dtype=jnp.float32,
-            interpret: bool = False):
-    """x: (M, K) float @ qw: (K, N) int8/fp8 -> (M, N) with fused epilogue.
+            interpret: bool = False, pack: int = 1):
+    """x: (M, K) float @ qw: (K/pack, N) int8/fp8 -> (M, N), fused epilogue.
 
     ``tile_scales``: (K // block_k, N) fp32 — one dequant-scale row per
     K-tile (the wrapper expands per-block scales; a tile never straddles a
-    quant block). Shapes must already be padded to the block multiples.
+    quant block). ``pack=2`` marks int4 nibble-packed ``qw`` (unpacked
+    in-tile). Shapes must already be padded to the block multiples; block
+    sizes are in *logical* K elements, so ``block_k % pack == 0``.
     """
     M, K = x.shape
-    K2, N = qw.shape
-    assert K == K2, (x.shape, qw.shape)
+    Kq, N = qw.shape
+    assert Kq * pack == K, (x.shape, qw.shape, pack)
+    assert block_k % pack == 0, (block_k, pack)
     assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
         "pad in ops.py first", (M, K, N), (block_m, block_k, block_n))
     n_k = K // block_k
     assert tile_scales.shape == (n_k, N), (tile_scales.shape, n_k, N)
     grid = (M // block_m, N // block_n, n_k)
+    bkq = block_k // pack          # storage rows per weight tile
 
     if bias is None:
         kernel = functools.partial(_wq_kernel, n_k=n_k, scale=scale, act=act,
-                                   out_dtype=out_dtype)
+                                   out_dtype=out_dtype, pack=pack)
         in_specs = [
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bkq, block_n), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
         ]
         args = (x, qw, tile_scales)
     else:
         kernel = functools.partial(_wq_bias_kernel, n_k=n_k, scale=scale,
-                                   act=act, out_dtype=out_dtype)
+                                   act=act, out_dtype=out_dtype, pack=pack)
         in_specs = [
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bkq, block_n), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
         ]

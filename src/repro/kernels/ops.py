@@ -23,6 +23,8 @@ from repro.kernels.dispatch import (OpRequest, registry, serve_mesh,
                                     use_backend)
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.gemm import gemm as _gemm
+from repro.kernels.gemm_sparse import gemm_sparse as _gemm_sparse
+from repro.kernels.gemm_sparse import gemm_sparse_24 as _gemm_sparse_24
 from repro.kernels.gemm_wq import gemm_wq as _gemm_wq
 from repro.kernels.instream import instream_scale_reduce as _instream
 from repro.kernels.lru_scan import lru_scan as _lru
@@ -30,9 +32,9 @@ from repro.kernels.packed_gather import gather_rows as _gather
 from repro.kernels.packed_gather import packed_gather_rows as _packed_gather
 from repro.kernels.paged_attention import paged_attention as _pa
 
-__all__ = ["flash_attention", "gather_rows", "gemm", "gemm_wq",
-           "instream_scale_reduce", "lru_scan", "packed_gather_rows",
-           "paged_attention", "registry", "use_backend"]
+__all__ = ["flash_attention", "gather_rows", "gemm", "gemm_sparse",
+           "gemm_sparse_24", "gemm_wq", "instream_scale_reduce", "lru_scan",
+           "packed_gather_rows", "paged_attention", "registry", "use_backend"]
 
 #: Storage dtype names of quantized weight/KV operands (str(jnp.dtype)) —
 #: the quant subsystem's canonical list, not a private copy.
@@ -112,8 +114,15 @@ def _gemm_wq_supports(req: OpRequest) -> bool:
     if len(req.shapes) < 3 or any(len(s) != 2 for s in req.shapes[:3]):
         return False
     (M, K), (K2, N), (nb, N2) = req.shapes[:3]
-    return (K == K2 and N == N2 and nb >= 1 and K % nb == 0
-            and _is_float(req.dtypes[0]) and req.dtypes[1] in _QUANT_DTYPES)
+    if not (N == N2 and nb >= 1 and K % nb == 0
+            and _is_float(req.dtypes[0])):
+        return False
+    if K == K2:
+        return req.dtypes[1] in _QUANT_DTYPES
+    # nibble-packed int4: the weight's K axis is physically halved, and a
+    # quant block must hold a whole number of bytes so K-tiles stay packed
+    return (K2 * 2 == K and req.dtypes[1] == "int8"
+            and (K // nb) % 2 == 0)
 
 
 @registry.register("gemm_wq", "pallas", backends=("pallas", "interpret"),
@@ -127,13 +136,18 @@ def _gemm_wq_kernel(x, qw, scales, bias=None, *, scale: float = 1.0,
                     interpret: bool = False):
     import math
 
-    M, K = x.shape
+    M, K = x.shape                     # logical K (int4: qw rows are K/2)
     N = qw.shape[1]
+    pack = 2 if qw.shape[0] * 2 == K else 1
     nb = scales.shape[0]
     qb = K // nb                       # quant-block length along K
     # a K-tile must never straddle a quant block: largest block_k-compatible
     # divisor of qb (K % bk == 0 follows since bk | qb | K — no K padding)
     bk = math.gcd(block_k, qb)
+    if pack == 2 and bk % 2:
+        # packed tiles hold whole bytes; qb is even (supports()), so this
+        # stays a divisor of qb
+        bk = math.gcd(2 * bk, qb)
     n_k = K // bk
     # one dequant-scale row per K-tile, pre-gathered so the kernel's scale
     # BlockSpec is a plain (k, j) index map
@@ -147,7 +161,7 @@ def _gemm_wq_kernel(x, qw, scales, bias=None, *, scale: float = 1.0,
         bp, _ = _pad_to(bias, (block_n,), (0,))
     out = _gemm_wq(xp, qp, sp, bias=bp, scale=scale, act=act,
                    block_m=block_m, block_n=block_n, block_k=bk,
-                   interpret=interpret)
+                   interpret=interpret, pack=pack)
     return out[:M, :N] if (px or pw) else out
 
 
@@ -166,15 +180,131 @@ registry.register_blocks("gemm_wq", "large", block_m=128, block_n=128,
 
 def gemm_wq(x, qw, scales, bias=None, *, scale: float = 1.0,
             act: str | None = None, **blocks):
-    """Weight-quantized x: (M, K) @ qw: (K, N) int8/fp8 with per-block
-    dequant scales (nb, N), nb | K (nb == 1 => per-channel), and the same
-    fused scale/bias/activation epilogue as ``gemm``.
+    """Weight-quantized x: (M, K) @ qw: (K, N) int8/fp8 — or (K/2, N) int8
+    nibble-packed int4, recognized by the half-K shape relation — with
+    per-block dequant scales (nb, N), nb | K (nb == 1 => per-channel), and
+    the same fused scale/bias/activation epilogue as ``gemm``.
 
-    The Pallas entry dequantizes weight tiles in-register after the DMA;
-    requests the kernel layout can't express (odd ranks, dense-float
-    weights) negotiate down to the dequantize-then-``gemm`` oracle.
+    The Pallas entry dequantizes (int4: unpacks, then dequantizes) weight
+    tiles in-register after the DMA; requests the kernel layout can't
+    express (odd ranks, dense-float weights, odd-byte quant blocks)
+    negotiate down to the dequantize-then-``gemm`` oracle.
     """
     return registry.dispatch("gemm_wq", x, qw, scales, bias, scale=scale,
+                             act=act, **blocks)
+
+
+# --------------------------------------------------------------------------
+# gemm_sparse — structured-sparse GEMM (paper's SpMM/STC arc, arXiv:2406.15068:
+# sparsity coarse enough that the FPU still streams dense inner tiles)
+# --------------------------------------------------------------------------
+def _gemm_sparse_block_supports(req: OpRequest) -> bool:
+    """Block-sparse layout: (M, K) x, (K, N) float w, (K/bs_k, N/bs_n)
+    bool/int block mask."""
+    if len(req.shapes) < 3 or any(len(s) != 2 for s in req.shapes[:3]):
+        return False
+    (M, K), (K2, N), (kb, nb) = req.shapes[:3]
+    return (K == K2 and kb >= 1 and nb >= 1 and K % kb == 0 and N % nb == 0
+            and _is_float(req.dtypes[0]) and _is_float(req.dtypes[1])
+            and ("bool" in req.dtypes[2] or "int" in req.dtypes[2]))
+
+
+def _gemm_sparse_24_supports(req: OpRequest) -> bool:
+    """2:4 layout: (M, K) x, (K/2, N) float vals, (K/2, N) int8 indices."""
+    if len(req.shapes) < 3 or any(len(s) != 2 for s in req.shapes[:3]):
+        return False
+    (M, K), (Kh, N), idx_shape = req.shapes[:3]
+    return (Kh * 2 == K and K % 4 == 0 and idx_shape == (Kh, N)
+            and _is_float(req.dtypes[0]) and _is_float(req.dtypes[1])
+            and req.dtypes[2] == "int8")
+
+
+@registry.register("gemm_sparse", "pallas_block",
+                   backends=("pallas", "interpret"),
+                   supports=_gemm_sparse_block_supports, priority=10,
+                   pass_interpret=True)
+@partial(jax.jit, static_argnames=("scale", "act", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def _gemm_sparse_block_kernel(x, w, mask, *, scale: float = 1.0,
+                              act: str | None = None, block_m: int = 128,
+                              block_n: int = 128, block_k: int = 128,
+                              interpret: bool = False):
+    import math
+
+    M, K = x.shape
+    N = w.shape[1]
+    kb, nb = mask.shape
+    bs_k, bs_n = K // kb, N // nb
+    # kernel tiles must divide the mask blocks (and the mask blocks divide
+    # K/N), so shrinking via gcd removes any need for K/N padding
+    bk = math.gcd(block_k, bs_k)
+    bn = math.gcd(block_n, bs_n)
+    xp, px = _pad_to(x, (block_m,), (0,))
+    out = _gemm_sparse(xp, w, mask, scale=scale, act=act, block_m=block_m,
+                       block_n=bn, block_k=bk, interpret=interpret)
+    return out[:M] if px else out
+
+
+@registry.register("gemm_sparse", "pallas_24",
+                   backends=("pallas", "interpret"),
+                   supports=_gemm_sparse_24_supports, priority=10,
+                   pass_interpret=True)
+@partial(jax.jit, static_argnames=("scale", "act", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def _gemm_sparse_24_kernel(x, vals, idx, *, scale: float = 1.0,
+                           act: str | None = None, block_m: int = 128,
+                           block_n: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    import math
+
+    M, K = x.shape
+    N = vals.shape[1]
+    bk = math.gcd(block_k, K)
+    if bk % 4:                         # tiles hold whole 2:4 groups
+        bk = math.gcd(4 * bk, K)
+    xp, px = _pad_to(x, (block_m,), (0,))
+    vp, pn = _pad_to(vals, (block_n,), (1,))
+    # zero-padded idx columns pair zero vals: the densified tile stays zero
+    ip, _ = _pad_to(idx, (block_n,), (1,))
+    out = _gemm_sparse_24(xp, vp, ip, scale=scale, act=act, block_m=block_m,
+                          block_n=block_n, block_k=bk, interpret=interpret)
+    return out[:M, :N] if (px or pn) else out
+
+
+@registry.register("gemm_sparse", "ref",
+                   backends=("ref", "interpret", "pallas"))
+@partial(jax.jit, static_argnames=("scale", "act"))
+def _gemm_sparse_ref(x, w_or_vals, mask_or_idx, *, scale: float = 1.0,
+                     act: str | None = None):
+    return _ref.gemm_sparse_ref(x, w_or_vals, mask_or_idx, scale=scale,
+                                act=act)
+
+
+registry.register_blocks("gemm_sparse", "small", block_m=32, block_n=32,
+                         block_k=32)
+registry.register_blocks("gemm_sparse", "large", block_m=128, block_n=128,
+                         block_k=128)
+
+
+def gemm_sparse(x, w, mask, *, scale: float = 1.0, act: str | None = None,
+                **blocks):
+    """Block-sparse x: (M, K) @ w: (K, N) gated by a (K/bs_k, N/bs_n)
+    bool/int block mask: masked weight blocks are skipped — no MXU issue,
+    no FLOPs — and the epilogue matches ``gemm``. Layouts the kernel can't
+    express negotiate down to the dense-mask oracle (exact parity: the
+    oracle zeroes the same blocks and runs the plain GEMM)."""
+    return registry.dispatch("gemm_sparse", x, w, mask, scale=scale,
+                             act=act, **blocks)
+
+
+def gemm_sparse_24(x, vals, idx, *, scale: float = 1.0,
+                   act: str | None = None, **blocks):
+    """2:4 fine-grained sparse GEMM: ``vals``/``idx`` (K/2, N) from
+    ``gemm_sparse.sparsify_24`` — 2 survivors per 4 consecutive K elements.
+    Weight HBM traffic halves; the kernel densifies in-tile (iota-compare
+    scatter) and runs dense MXU tiles. Same op name as ``gemm_sparse``:
+    the registry picks the layout by operand shapes/dtypes."""
+    return registry.dispatch("gemm_sparse", x, vals, idx, scale=scale,
                              act=act, **blocks)
 
 

@@ -52,15 +52,19 @@ def _pa_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
         k = k_ref[0, :, 0, :]                        # (page, D)
         v = v_ref[0, :, 0, :]
         if ks_ref is not None:
-            # quantized pool: int8/fp8 rows crossed HBM at storage width;
-            # dequantize in-tile with the page's per-row scales
-            k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None].astype(
-                jnp.float32)
-            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None].astype(
-                jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (G, page)
+            # quantized pool, end-to-end: QK^T runs *on the storage codes*
+            # via a mixed-input native dot (f32 x int8/fp8 -> f32) and the
+            # per-row absmax scale — constant along D — factors out of the
+            # contraction onto the (G, page) score matrix. No fp32/bf16
+            # copy of the (page, D) tile is ever materialized.
+            s = jax.lax.dot_general(
+                q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            s = s * ks_ref[0, :, 0][None, :].astype(jnp.float32) * scale
+        else:
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # (G, page)
         if cap:
             s = jnp.tanh(s / cap) * cap
         pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -70,9 +74,17 @@ def _pa_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)[:, None]
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if vs_ref is not None:
+            # fold the per-v-row scale into the small (G, page) probability
+            # matrix, then contract directly against the storage codes
+            pv = p * vs_ref[0, :, 0][None, :].astype(jnp.float32)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                pv, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
     @pl.when(j == n_pages - 1)
@@ -101,9 +113,11 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths,
     (N, page, K, D); block_tables: (B, P) int32 pool block ids; lengths:
     (B,) int32 valid tokens per slot (current token included). With
     ``k_scale``/``v_scale`` ((N, page, K) float) the pools are *quantized*
-    (int8/fp8 storage) and rows dequantize in-tile with their per-row absmax
-    scales — the scale tiles chase the block table exactly like the pools.
-    Returns (B, K, G, D)."""
+    (int8/fp8 storage) and the kernel contracts *directly against the
+    storage codes* with mixed-input native dots, folding the per-row absmax
+    scales into the (G, page) score/probability matrices — no bf16/fp32
+    page-sized copy is ever materialized; the scale tiles chase the block
+    table exactly like the pools. Returns (B, K, G, D)."""
     B, K, G, D = q.shape
     N, page = k_pool.shape[:2]
     P = block_tables.shape[1]

@@ -23,14 +23,39 @@ def gemm_ref(x, w, *, bias=None, scale=1.0, act=None):
 def gemm_wq_ref(x, qw, scales, bias=None, *, scale=1.0, act=None):
     """Dequantize-then-GEMM oracle for the weight-quantized ``gemm_wq``.
 
-    qw: (K, N) int8/fp8 storage; scales: (nb, N) fp32 per-block absmax
-    scales with nb dividing K (nb == 1 => per-channel). The dequantized
-    weight is materialized in fp32 — the negotiation fallback and the
-    numerical source of truth for the in-tile-dequant Pallas kernel."""
+    qw: (K, N) int8/fp8 storage — or (K/2, N) int8 nibble-packed int4,
+    recognized by the half-K shape relation against ``x`` and unpacked
+    first; scales: (nb, N) fp32 per-block absmax scales with nb dividing K
+    (nb == 1 => per-channel). The dequantized weight is materialized in
+    fp32 — the negotiation fallback and the numerical source of truth for
+    the in-tile-dequant Pallas kernel."""
+    if qw.shape[0] * 2 == x.shape[-1] and qw.dtype == jnp.int8:
+        from repro.quant.tensor import unpack_int4
+        qw = unpack_int4(qw, axis=0)
     K, N = qw.shape
     nb = scales.shape[0]
     w = (qw.astype(jnp.float32).reshape(nb, K // nb, N)
          * scales.astype(jnp.float32)[:, None, :]).reshape(K, N)
+    return gemm_ref(x, w, bias=bias, scale=scale, act=act)
+
+
+def gemm_sparse_ref(x, w_or_vals, mask_or_idx, bias=None, *, scale=1.0,
+                    act=None):
+    """Dense-mask oracle for ``gemm_sparse`` — both structured layouts.
+
+    Block-sparse: ``(x, w (K, N) float, mask (K/bs, N/bs) bool/int)`` —
+    masked blocks zeroed, then the plain GEMM. 2:4: ``(x, vals (K/2, N),
+    idx (K/2, N) int8)`` — densified with zeros at pruned positions. Either
+    way the oracle materializes the exact dense weight the kernel consumes
+    tile-by-tile, so parity is exact (identical per-element reassociation).
+    """
+    from repro.kernels.gemm_sparse import apply_block_mask, densify_24
+    if (mask_or_idx.dtype == jnp.int8
+            and mask_or_idx.shape == w_or_vals.shape):
+        w = densify_24(w_or_vals, mask_or_idx)
+    else:
+        w = apply_block_mask(w_or_vals.astype(jnp.float32),
+                             mask_or_idx != 0)
     return gemm_ref(x, w, bias=bias, scale=scale, act=act)
 
 

@@ -60,9 +60,10 @@ def main(argv=None):
                          "their owners finish (0 = bounded only by pool "
                          "pressure; default: cfg.prefix_lru)")
     ap.add_argument("--weight-dtype", default=None,
-                    choices=("int8", "fp8"),
+                    choices=("int8", "fp8", "int4"),
                     help="weight-only quantization (repro.quant): wraps "
-                         "matmul weights post-load, dispatches gemm_wq")
+                         "matmul weights post-load, dispatches gemm_wq "
+                         "(int4 packs two nibbles per byte)")
     ap.add_argument("--kv-dtype", default=None, choices=("int8", "fp8"),
                     help="quantized paged KV pools (requires --paged)")
     ap.add_argument("--quant-block", type=int, default=None,

@@ -91,11 +91,13 @@ def _dispatch_sort(x, gate, idx, C: int, E: int):
     dest = jnp.where(keep, sorted_e * C + seg_pos, E * C)  # overflow row dropped
     xe_flat = jnp.zeros((E * C + 1, x.shape[-1]), x.dtype)
     # the token-row stream is an indexed gather — the paper's packed
-    # irregular streams. Registry-dispatched only under an explicit
-    # use_backend scope (forward/inference): the Pallas gather defines no
-    # JVP, and ambient auto-detection must never reroute a training graph.
+    # irregular streams, issued through the *packed* gather (rows coalesced
+    # into wide flits in index order, unpermuted after). Registry-dispatched
+    # only under an explicit use_backend scope (forward/inference): the
+    # Pallas gather defines no JVP, and ambient auto-detection must never
+    # reroute a training graph.
     if kdispatch.kernel_scope_active():
-        gathered = kops.gather_rows(x, sorted_tok)
+        gathered = kops.packed_gather_rows(x, sorted_tok)
     else:
         gathered = x[sorted_tok]
     xe_flat = xe_flat.at[dest].set(gathered)
@@ -134,6 +136,52 @@ def _expert_ffn_wq(p: Params, xe, compute_dtype):
     return jnp.stack(outs, axis=1).astype(compute_dtype)
 
 
+def sparsify_experts(p: Params, density: float,
+                     *, block: tuple[int, int] = (16, 16)) -> Params:
+    """Magnitude block-prune the routed expert FFN weights to ``density``.
+
+    Returns a new params tree whose ``experts/{gate,up,down}`` slabs are
+    hard-zeroed outside the kept blocks (so the XLA einsum path and the
+    ``gemm_sparse`` kernel path compute the *same* function) plus matching
+    per-expert block masks under ``experts/{gate,up,down}_mask`` — the
+    operand :func:`_expert_ffn` dispatches through the block-skipping
+    kernel under a kernel scope. ``block`` is the (K, N) prune granularity.
+    """
+    from repro.kernels.gemm_sparse import (apply_block_mask,
+                                           block_mask_from_weight)
+    ex = dict(p["experts"])
+    for name in ("gate", "up", "down"):
+        w = ex[name]
+        masks = jax.vmap(
+            lambda we: block_mask_from_weight(we, block[0], block[1],
+                                              density))(w)
+        ex[name] = jax.vmap(apply_block_mask)(w, masks).astype(w.dtype)
+        ex[name + "_mask"] = masks
+    out = dict(p)
+    out["experts"] = ex
+    return out
+
+
+def _expert_ffn_sparse(p: Params, xe, compute_dtype):
+    """Block-sparse expert FFN under a kernel scope: each expert's pruned
+    (d, f) slab dispatches ``gemm_sparse`` with its block mask — masked
+    blocks skip the MXU issue entirely (the paper's SpMM utilization arc).
+    xe: (G, E, C, d) -> (G, E, C, d)."""
+    G, E, C, d = xe.shape
+    ex = p["experts"]
+    outs = []
+    for e in range(E):
+        x_e = xe[:, e].reshape(G * C, d).astype(compute_dtype)
+        h = (kops.gemm_sparse(x_e, ex["gate"][e].astype(compute_dtype),
+                              ex["gate_mask"][e], act="silu")
+             * kops.gemm_sparse(x_e, ex["up"][e].astype(compute_dtype),
+                                ex["up_mask"][e])).astype(compute_dtype)
+        y = kops.gemm_sparse(h, ex["down"][e].astype(compute_dtype),
+                             ex["down_mask"][e])
+        outs.append(y.reshape(G, C, d))
+    return jnp.stack(outs, axis=1).astype(compute_dtype)
+
+
 def _expert_ffn(p: Params, xe, act: str, compute_dtype, part=None):
     """xe: (G, E, C, d) -> (G, E, C, d) through per-expert gated FFN.
 
@@ -142,13 +190,19 @@ def _expert_ffn(p: Params, xe, act: str, compute_dtype, part=None):
     moe's 60 experts) — C is rounded up to the axis size by the caller.
     Quantized expert weights (QuantTensor — see repro.quant) dequantize via
     ``astype`` on the XLA path; under an explicit kernel scope the local
-    path dispatches the weight-quantized grouped GEMM instead.
+    path dispatches the weight-quantized grouped GEMM instead. Block-pruned
+    experts (:func:`sparsify_experts`) dispatch the block-skipping
+    ``gemm_sparse`` under a kernel scope; on the XLA path their hard-zeroed
+    slabs make the einsum numerically identical.
     """
     from repro.quant import QuantTensor
 
     if (part is None and isinstance(p["experts"]["gate"], QuantTensor)
             and kdispatch.kernel_scope_active()):
         return _expert_ffn_wq(p, xe.astype(compute_dtype), compute_dtype)
+    if (part is None and "gate_mask" in p["experts"]
+            and kdispatch.kernel_scope_active()):
+        return _expert_ffn_sparse(p, xe.astype(compute_dtype), compute_dtype)
     w_g = p["experts"]["gate"].astype(compute_dtype)
     w_u = p["experts"]["up"].astype(compute_dtype)
     w_d = p["experts"]["down"].astype(compute_dtype)

@@ -385,11 +385,10 @@ def embed_tokens(params, cfg: ModelConfig, tokens, extra_embeds=None):
     table = params["embed"]["table"]
     dt = jnp.dtype(cfg.dtype)
     if isinstance(table, QuantTensor):
-        # quantized table (per-row scales, axis=-1): gather the int8/fp8
-        # rows and their scales FIRST, dequantize only the looked-up rows —
-        # never materialize the full dequantized (vocab, d) table per step
-        x = (table.q[tokens].astype(jnp.float32)
-             * table.scales[tokens].astype(jnp.float32)).astype(dt)
+        # quantized table (per-row scales, axis=-1): gather the stored rows
+        # and their scales FIRST, then dequantize (int4: unpack) only the
+        # looked-up rows — never materialize the full (vocab, d) table
+        x = table.take_rows(tokens, dtype=dt)
     else:
         if table.dtype != dt:
             # cast BEFORE the (vocab-sharded) gather: the lookup's masked

@@ -19,12 +19,13 @@ in ``models/cache.py`` (see docs/quantization.md).
 from repro.quant.params import (is_quantized, param_bytes, quantize_params)
 from repro.quant.tensor import (QUANT_DTYPES, QuantTensor, canonical_dtype,
                                 dequantize_kv, dequantize_weight, dtype_bytes,
-                                is_quant_dtype, quantize_int8, quantize_kv,
-                                quantize_tensor, quantize_weight)
+                                is_quant_dtype, pack_int4, quantize_int8,
+                                quantize_kv, quantize_tensor, quantize_weight,
+                                unpack_int4)
 
 __all__ = [
     "QUANT_DTYPES", "QuantTensor", "canonical_dtype", "dequantize_kv",
     "dequantize_weight", "dtype_bytes", "is_quant_dtype", "is_quantized",
-    "param_bytes", "quantize_int8", "quantize_kv", "quantize_params",
-    "quantize_tensor", "quantize_weight",
+    "pack_int4", "param_bytes", "quantize_int8", "quantize_kv",
+    "quantize_params", "quantize_tensor", "quantize_weight", "unpack_int4",
 ]

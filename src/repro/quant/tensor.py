@@ -5,8 +5,8 @@ silicon doubles throughput every time precision halves (paper Fig. 4b / the
 Ogopogo compute-density argument). The software analogue here is *weight-only
 post-training quantization*: master weights stay fp32/bf16 for training, and
 a post-load transform (:func:`repro.quant.params.quantize_params`) wraps the
-matmul weights in :class:`QuantTensor` — int8 or fp8-e4m3 storage plus
-per-channel (optionally per-block) fp32 absmax scales.
+matmul weights in :class:`QuantTensor` — int8, fp8-e4m3, or packed int4
+storage plus per-channel (optionally per-block) absmax scales.
 
 ``QuantTensor`` is a registered JAX pytree whose ``astype`` *dequantizes*, so
 every existing call site of the form ``p["q_proj"]["kernel"].astype(dtype)``
@@ -18,7 +18,19 @@ dispatch the ``gemm_wq`` registry op instead.
 Calibration is plain absmax (symmetric, zero-point-free):
 
   * int8: ``scale = amax / 127``, values rounded and clipped to [-127, 127];
-  * fp8-e4m3: ``scale = amax / 448`` (e4m3's max normal), values cast.
+  * fp8-e4m3: ``scale = amax / 448`` (e4m3's max normal), values clipped to
+    [-448, 448] then cast — the raw e4m3 cast only saturates within rounding
+    distance of the boundary and produces NaN beyond it, so the clip is
+    load-bearing;
+  * int4: ``scale = amax / 7``, values rounded and clipped to [-7, 7], then
+    two codes packed per int8 byte along the quantization axis (lo nibble =
+    even logical index, hi nibble = odd). ``QuantTensor.pack == 2`` marks
+    the packed layout; the logical (unpacked) shape is what ``.shape``
+    reports.
+
+Absmax is floored at ``_EPS`` so all-zero rows/blocks (padding rows, the
+block-0 null write-sink pages) quantize to exact zeros: an unfloored
+``amax == 0`` underflows to a 0.0 float16 scale and ``0 / 0`` stores NaN.
 
 ``block > 0`` splits the contraction axis into ``K // block`` groups with one
 scale each — narrower groups bound the absmax blast radius of outlier
@@ -30,13 +42,17 @@ import jax
 import jax.numpy as jnp
 
 #: Storage dtypes the subsystem understands, with accepted aliases.
-QUANT_DTYPES = ("int8", "float8_e4m3fn")
+QUANT_DTYPES = ("int8", "float8_e4m3fn", "int4")
 _ALIASES = {"fp8": "float8_e4m3fn", "e4m3": "float8_e4m3fn",
             "float8": "float8_e4m3fn", "int8": "int8",
-            "float8_e4m3fn": "float8_e4m3fn"}
+            "float8_e4m3fn": "float8_e4m3fn", "int4": "int4"}
 #: Largest representable magnitude per storage dtype.
-_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0}
-_EPS = 1e-12
+_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0, "int4": 7.0}
+#: Absmax floor. Chosen so the float16-stored scale survives the cast even
+#: for the widest code range: 1e-4 / 448 ≈ 2.2e-7 is still a representable
+#: fp16 subnormal (min 6e-8), whereas the old additive 1e-12 underflowed to
+#: a 0.0 scale on all-zero rows and stored NaN.
+_EPS = 1e-4
 
 
 def canonical_dtype(name: str) -> str:
@@ -51,24 +67,63 @@ def is_quant_dtype(name: str) -> bool:
     return bool(name) and name in _ALIASES
 
 
-def dtype_bytes(name: str) -> int:
+def dtype_bytes(name: str) -> float:
     """Storage bytes per element for any dtype name (quant aliases included).
-    Used by the roofline/memfloor byte terms (core/roofline.py)."""
+    Used by the roofline/memfloor byte terms (core/roofline.py). Packed int4
+    is half a byte per logical element."""
     if is_quant_dtype(name):
         name = canonical_dtype(name)
+        if name == "int4":
+            return 0.5
     return jnp.dtype(name).itemsize
 
 
 def _storage_dtype(name: str):
-    return jnp.dtype(canonical_dtype(name))
+    name = canonical_dtype(name)
+    # int4 codes live two-per-byte in an int8 container
+    return jnp.dtype("int8" if name == "int4" else name)
 
 
 def _cast_q(x, dtype: str):
-    """fp32 scaled values -> storage dtype (round+clip for int8, cast for
-    fp8: the e4m3 cast saturates)."""
+    """fp32 scaled values -> storage dtype (round+clip for the int rungs,
+    clip+cast for fp8 — the e4m3 cast only saturates at the boundary and
+    NaNs past ~±464, so out-of-range values must be clipped first)."""
     if dtype == "int8":
         return jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
-    return x.astype(jnp.float8_e4m3fn)
+    if dtype == "int4":
+        # unpacked codes; pack_int4 interleaves them two per byte
+        return jnp.clip(jnp.round(x), -7, 7).astype(jnp.int8)
+    return jnp.clip(x, -448.0, 448.0).astype(jnp.float8_e4m3fn)
+
+
+# --------------------------------------------------------------------------
+# int4 nibble packing
+# --------------------------------------------------------------------------
+def pack_int4(codes, axis: int = -2):
+    """Pack int8 codes in [-7, 7] two-per-byte along ``axis`` (which must be
+    even-length): byte ``i`` holds logical element ``2i`` in its low nibble
+    and ``2i + 1`` in the high nibble."""
+    axis = axis % codes.ndim
+    K = codes.shape[axis]
+    if K % 2:
+        raise ValueError(f"int4 packing needs an even axis length, got {K}")
+    shape = codes.shape[:axis] + (K // 2, 2) + codes.shape[axis + 1:]
+    c = codes.astype(jnp.int8).reshape(shape)
+    lo = jax.lax.index_in_dim(c, 0, axis + 1, keepdims=False)
+    hi = jax.lax.index_in_dim(c, 1, axis + 1, keepdims=False)
+    return ((lo & jnp.int8(0x0F)) | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed, axis: int = -2):
+    """Inverse of :func:`pack_int4`: int8 nibble pairs -> int8 codes with
+    ``axis`` doubled. Sign-extends via shift pairs (arithmetic ``>>``)."""
+    axis = axis % packed.ndim
+    lo = (packed << 4).astype(jnp.int8) >> 4
+    hi = packed >> 4
+    st = jnp.stack([lo, hi], axis=axis + 1)        # (..., K/2, 2, ...)
+    shape = (packed.shape[:axis] + (packed.shape[axis] * 2,)
+             + packed.shape[axis + 1:])
+    return st.reshape(shape)
 
 
 # --------------------------------------------------------------------------
@@ -77,7 +132,7 @@ def _cast_q(x, dtype: str):
 # --------------------------------------------------------------------------
 def quantize_int8(x: jnp.ndarray):
     """Whole-tensor absmax int8: returns (q int8, scalar fp32 scale)."""
-    amax = jnp.max(jnp.abs(x)) + _EPS
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), _EPS)
     scale = amax / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
@@ -91,11 +146,13 @@ def quantize_weight(w, dtype: str = "int8", *, block: int = 0,
     """Quantize ``w`` along ``axis`` (the matmul contraction axis).
 
     Returns ``(q, scales)`` where ``q`` has ``w``'s shape in the storage
-    dtype and ``scales`` (float16 — its rounding is ~8x below the int8
-    step, and narrow scales keep the container's byte overhead at
-    ``2 / block`` per element) has the same shape except ``axis`` reduced
-    to ``n_blocks`` (= 1 per-channel, or ``K // block`` when ``block``
-    divides the axis; a non-dividing ``block`` falls back to per-channel).
+    dtype — except for ``dtype="int4"`` where the quantization axis is
+    nibble-packed to half length (two codes per int8 byte) — and ``scales``
+    (float16 — its rounding is ~8x below the int8 step, and narrow scales
+    keep the container's byte overhead at ``2 / block`` per element) has the
+    same shape except ``axis`` reduced to ``n_blocks`` (= 1 per-channel, or
+    ``K // block`` when ``block`` divides the axis; a non-dividing ``block``
+    falls back to per-channel).
     """
     dtype = canonical_dtype(dtype)
     axis = axis % w.ndim
@@ -106,16 +163,23 @@ def quantize_weight(w, dtype: str = "int8", *, block: int = 0,
     # view blocks: (..., nb, kb, ...) with the block pair at `axis`
     shape = w.shape[:axis] + (nb, kb) + w.shape[axis + 1:]
     wb = wf.reshape(shape)
-    amax = jnp.max(jnp.abs(wb), axis=axis + 1) + _EPS      # (..., nb, ...)
+    amax = jnp.maximum(jnp.max(jnp.abs(wb), axis=axis + 1), _EPS)
     scales = (amax / _QMAX[dtype]).astype(jnp.float16)
     q = _cast_q(wb / jnp.expand_dims(scales.astype(jnp.float32), axis + 1),
                 dtype)
-    return q.reshape(w.shape), scales
+    q = q.reshape(w.shape)
+    if dtype == "int4":
+        q = pack_int4(q, axis)
+    return q, scales
 
 
-def dequantize_weight(q, scales, *, axis: int = -2, dtype=jnp.float32):
-    """Inverse of :func:`quantize_weight` (up to quantization error)."""
+def dequantize_weight(q, scales, *, axis: int = -2, dtype=jnp.float32,
+                      pack: int = 1):
+    """Inverse of :func:`quantize_weight` (up to quantization error).
+    ``pack=2`` unpacks int4 nibbles along ``axis`` first."""
     axis = axis % q.ndim
+    if pack == 2:
+        q = unpack_int4(q, axis)
     nb = scales.shape[axis]
     kb = q.shape[axis] // nb
     shape = q.shape[:axis] + (nb, kb) + q.shape[axis + 1:]
@@ -133,11 +197,14 @@ def quantize_kv(x, dtype: str = "int8"):
     One absmax scale per (row, head): decode writes one token at a time, so
     per-row scales need no calibration pass and stay exact under incremental
     writes. Scales are stored float16 — the pool bookkeeping overhead is
-    ``2 / head_dim`` bytes per element.
+    ``2 / head_dim`` bytes per element. int4 is weight-only: the paged
+    pools and attention kernels take byte-addressable rows.
     """
     dtype = canonical_dtype(dtype)
+    if dtype == "int4":
+        raise ValueError("int4 is weight-only; KV pools support int8/fp8")
     xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf), axis=-1) + _EPS
+    amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), _EPS)
     scales = (amax / _QMAX[dtype]).astype(jnp.float16)
     q = _cast_q(xf / scales.astype(jnp.float32)[..., None], dtype)
     return q, scales
@@ -162,29 +229,42 @@ class QuantTensor:
     path-based checkpointing (leaf keys ``....q`` / ``....scales``) without
     special cases. ``axis`` (static aux data) is the contraction axis the
     scales reduce, counted from the end: -2 for ``(K, N)`` matmul kernels,
-    -1 for the per-row-quantized embedding table.
+    -1 for the per-row-quantized embedding table. ``pack`` (also aux) is 1
+    for byte-addressable storage and 2 for the int4 nibble-packed layout,
+    where ``q``'s quantization axis is physically half the logical length;
+    ``shape`` always reports the *logical* shape so matmul call sites keyed
+    off ``w.shape`` stay layout-agnostic.
     """
 
-    def __init__(self, q, scales, axis: int = -2):
+    def __init__(self, q, scales, axis: int = -2, pack: int = 1):
         self.q = q
         self.scales = scales
         self.axis = axis
+        self.pack = pack
 
     # ---- pytree protocol --------------------------------------------------
     def tree_flatten_with_keys(self):
         return (((jax.tree_util.GetAttrKey("q"), self.q),
                  (jax.tree_util.GetAttrKey("scales"), self.scales)),
-                self.axis)
+                (self.axis, self.pack))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         q, scales = children
-        return cls(q, scales, axis=aux)
+        if isinstance(aux, tuple):
+            axis, pack = aux
+        else:                       # pre-int4 checkpoints: bare axis int
+            axis, pack = aux, 1
+        return cls(q, scales, axis=axis, pack=pack)
 
     # ---- array-like surface (what model call sites touch) ----------------
     @property
     def shape(self):
-        return self.q.shape
+        if self.pack == 1:
+            return self.q.shape
+        axis = self.axis % self.q.ndim
+        return (self.q.shape[:axis] + (self.q.shape[axis] * self.pack,)
+                + self.q.shape[axis + 1:])
 
     @property
     def ndim(self):
@@ -196,6 +276,8 @@ class QuantTensor:
 
     @property
     def nbytes(self) -> int:
+        """Physical storage bytes (packed int4 counts half a byte per
+        logical element)."""
         return int(self.q.size * self.q.dtype.itemsize
                    + self.scales.size * self.scales.dtype.itemsize)
 
@@ -205,7 +287,16 @@ class QuantTensor:
 
     def dequantize(self, dtype=jnp.float32):
         return dequantize_weight(self.q, self.scales, axis=self.axis,
-                                 dtype=dtype)
+                                 dtype=dtype, pack=self.pack)
+
+    def take_rows(self, idx, dtype=jnp.float32):
+        """Gather + dequantize leading-axis rows (the embedding lookup):
+        only the touched rows are unpacked/dequantized, never the full
+        table. Requires ``axis == -1`` (per-row scales)."""
+        if self.axis % self.q.ndim != self.q.ndim - 1:
+            raise ValueError("take_rows needs per-row scales (axis=-1)")
+        return dequantize_weight(self.q[idx], self.scales[idx], axis=-1,
+                                 dtype=dtype, pack=self.pack)
 
     def astype(self, dtype):
         """Dequantize — keeps ``p[...]["kernel"].astype(compute_dtype)``
@@ -218,12 +309,13 @@ class QuantTensor:
         return self.dequantize(jnp.float32).T
 
     def __repr__(self):
-        return (f"QuantTensor(shape={tuple(self.q.shape)}, "
+        return (f"QuantTensor(shape={tuple(self.shape)}, "
                 f"dtype={self.q.dtype}, n_blocks={self.n_blocks}, "
-                f"axis={self.axis})")
+                f"axis={self.axis}, pack={self.pack})")
 
 
 def quantize_tensor(w, dtype: str = "int8", *, block: int = 0,
                     axis: int = -2) -> QuantTensor:
     q, scales = quantize_weight(w, dtype, block=block, axis=axis)
-    return QuantTensor(q, scales, axis=axis)
+    pack = 2 if canonical_dtype(dtype) == "int4" else 1
+    return QuantTensor(q, scales, axis=axis, pack=pack)

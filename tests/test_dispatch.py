@@ -47,10 +47,14 @@ def _op_calls(dtype):
     pool_v = _rand((9, 8, 2, 16), dtype, seed=6)
     tables = jax.random.randint(KEY, (3, 4), 0, 9, jnp.int32)
     lengths = jnp.asarray([5, 17, 30], jnp.int32)
+    from repro.kernels.gemm_sparse import block_mask_from_weight
+    mask = block_mask_from_weight(w.astype(jnp.float32), 8, 8, 0.5)
     return {
         "gemm": lambda: ops.gemm(x, w, scale=0.5, act="gelu"),
         "gemm_wq": lambda: ops.gemm_wq(x, wq.q, wq.scales, scale=0.5,
                                        act="gelu"),
+        "gemm_sparse": lambda: ops.gemm_sparse(x, w, mask, scale=0.5,
+                                               act="gelu"),
         "flash_attention": lambda: ops.flash_attention(q, k, v, causal=True),
         "lru_scan": lambda: ops.lru_scan(a, b),
         "gather_rows": lambda: ops.gather_rows(table, idx),
@@ -67,8 +71,9 @@ def _op_calls(dtype):
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("op", sorted(
-    ["gemm", "gemm_wq", "flash_attention", "lru_scan", "gather_rows",
-     "packed_gather_rows", "instream_scale_reduce", "paged_attention"]))
+    ["gemm", "gemm_wq", "gemm_sparse", "flash_attention", "lru_scan",
+     "gather_rows", "packed_gather_rows", "instream_scale_reduce",
+     "paged_attention"]))
 def test_registry_parity_interpret_vs_ref(op, dtype):
     calls = _op_calls(dtype)
     with use_backend("ref"):

@@ -96,15 +96,225 @@ def test_quantize_int8_shared_with_collectives():
 
 def test_dtype_aliases_and_bytes():
     assert quant.canonical_dtype("fp8") == "float8_e4m3fn"
+    assert quant.canonical_dtype("int4") == "int4"
     assert quant.dtype_bytes("int8") == 1
     assert quant.dtype_bytes("fp8") == 1
+    assert quant.dtype_bytes("int4") == 0.5
     assert quant.dtype_bytes("bfloat16") == 2
+    # int4 is weight-only: valid for weight_dtype, rejected for kv_dtype
+    assert ModelConfig(weight_dtype="int4").weight_dtype == "int4"
     with pytest.raises(ValueError):
-        quant.canonical_dtype("int4")
-    with pytest.raises(ValueError):
-        ModelConfig(weight_dtype="int4")
+        ModelConfig(kv_dtype="int4")
     with pytest.raises(ValueError):
         ModelConfig(kv_dtype="fp16")
+    with pytest.raises(ValueError):
+        quant.quantize_kv(jnp.ones((2, 4)), "int4")
+    with pytest.raises(ValueError):
+        ModelConfig(weight_density=0.0)
+    assert ModelConfig(weight_density=0.5).weight_density == 0.5
+
+
+# --------------------------------------------------------------------------
+# edge cases: zero rows (scale floor) and fp8 saturation
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", ["int8", "fp8", "int4"])
+def test_all_zero_input_roundtrips_to_zero(dtype):
+    """Regression: an all-zero block used to produce a 0.0 (or underflowed)
+    scale whose reciprocal made NaN codes; the amax floor keeps the
+    round-trip exactly zero and finite everywhere."""
+    w = jnp.zeros((32, 16), jnp.float32)
+    q, s = quant.quantize_weight(w, dtype, block=16)
+    assert np.isfinite(np.asarray(s, np.float32)).all()
+    assert (np.asarray(s, np.float32) > 0).all()
+    back = np.asarray(quant.dequantize_weight(
+        q, s, pack=2 if dtype == "int4" else 1))
+    assert np.isfinite(back).all() and (back == 0).all()
+    if dtype != "int4":           # KV pools are int8/fp8 only
+        kv = jnp.zeros((2, 8, 16), jnp.float32)   # an all-zero KV page
+        kq, ks = quant.quantize_kv(kv, dtype)
+        kb = np.asarray(quant.dequantize_kv(kq, ks), np.float32)
+        assert np.isfinite(kb).all() and (kb == 0).all()
+    qz, sz = quant.quantize_int8(jnp.zeros((8,)))
+    assert float(sz) > 0 and not np.isnan(np.asarray(qz, np.float32)).any()
+
+
+def test_fp8_cast_saturates_instead_of_nan():
+    """Regression: a raw ``.astype(float8_e4m3fn)`` NaNs past ~±464 on CPU;
+    the quantizer clips to ±448 before casting, so outliers saturate."""
+    from repro.quant.tensor import _cast_q
+
+    x = jnp.asarray([448.0, -448.0, 464.0, 1e4, -1e38], jnp.float32)
+    out = np.asarray(_cast_q(x, "float8_e4m3fn"), np.float32)
+    assert np.isfinite(out).all(), out
+    np.testing.assert_array_equal(out, [448.0, -448.0, 448.0, 448.0, -448.0])
+    # and through the public quantizer: a wild outlier row stays finite
+    w = _rand((16, 8)).at[0, 0].set(3e4)
+    back = quant.dequantize_weight(*quant.quantize_weight(w, "fp8", block=8))
+    assert np.isfinite(np.asarray(back)).all()
+
+
+# --------------------------------------------------------------------------
+# int4: nibble packing, containers, gemm_wq
+# --------------------------------------------------------------------------
+def test_int4_pack_unpack_roundtrip():
+    from repro.quant import pack_int4, unpack_int4
+
+    codes = jnp.asarray(np.random.default_rng(0).integers(-8, 8, (12, 6)),
+                        jnp.int8)
+    packed = pack_int4(codes, axis=0)
+    assert packed.shape == (6, 6) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed, axis=0)),
+                                  np.asarray(codes))
+    with pytest.raises(ValueError):
+        pack_int4(codes[:11], axis=0)      # odd axis length
+
+
+@pytest.mark.parametrize("block", [0, 16, 32])
+def test_int4_weight_roundtrip_bound_and_bytes(block):
+    w = _rand((64, 48))
+    qt = quant.quantize_tensor(w, "int4", block=block)
+    assert qt.pack == 2 and qt.q.shape == (32, 48)   # two nibbles per byte
+    assert qt.shape == (64, 48)                      # logical shape
+    back = np.asarray(qt.dequantize())
+    amax = np.abs(np.asarray(w)).max()
+    assert np.abs(back - np.asarray(w)).max() <= 1.5 / 7 * amax
+    if block == 32:
+        bf16_bytes = w.size * 2
+        assert qt.nbytes / bf16_bytes <= 0.30, qt.nbytes / bf16_bytes
+
+
+def test_int4_quant_tensor_pytree_and_legacy_aux():
+    qt = quant.quantize_tensor(_rand((16, 8)), "int4", block=8)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    rt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rt.pack == 2 and rt.axis == qt.axis
+    # pre-pack checkpoints serialized a bare-int aux (axis only)
+    legacy = QuantTensor.tree_unflatten(-2, (qt.q, qt.scales))
+    assert legacy.pack == 1 and legacy.axis == -2
+
+
+@pytest.mark.parametrize("shape,block", [((48, 40, 56), 10), ((33, 64, 17), 16),
+                                         ((8, 128, 8), 32)])
+def test_gemm_wq_int4_kernel_matches_ref(shape, block):
+    M, K, N = shape
+    x = _rand((M, K))
+    qt = quant.quantize_tensor(_rand((K, N), seed=1), "int4", block=block)
+    assert qt.q.shape[0] == K // 2
+    exact = np.asarray(x @ qt.dequantize())
+    with use_backend("ref"):
+        want = ops.gemm_wq(x, qt.q, qt.scales)
+    with use_backend("interpret"):
+        got = ops.gemm_wq(x, qt.q, qt.scales)
+    np.testing.assert_allclose(np.asarray(want), exact, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_wq_int4_negotiation():
+    """Packed weights (K/2 rows) select the Pallas kernel when the scale
+    blocking splits into even tiles, and fall back to the dequantize ref
+    oracle otherwise — never a silent wrong-shape contraction."""
+    x = _rand((8, 40))
+    qt = quant.quantize_tensor(_rand((40, 16), seed=1), "int4", block=10)
+    req = registry.request("gemm_wq", x, qt.q, qt.scales)
+    impl = registry.select("gemm_wq", req, resolve_backend("interpret"))
+    assert impl.name == "pallas"      # 40/4=10 blocks? K//nb=10 even
+    # odd rows-per-scale-block (K//nb = 5) cannot tile packed bytes evenly
+    qt5 = quant.quantize_tensor(_rand((40, 16), seed=1), "int4", block=5)
+    req5 = registry.request("gemm_wq", x, qt5.q, qt5.scales)
+    assert registry.select("gemm_wq", req5,
+                           resolve_backend("interpret")).name == "ref"
+    with use_backend("interpret"):     # ref still computes the right thing
+        out = ops.gemm_wq(x, qt5.q, qt5.scales)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(x @ qt5.dequantize()),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_params_int4_bytes_and_forward():
+    cfg = _cfg(weight_dtype="int4", quant_block=32)
+    params = init(jax.random.PRNGKey(0), cfg)
+    qp = quant.quantize_params(params, cfg)
+    qt = qp["blocks"][0]["attn"]["q_proj"]["kernel"]
+    assert isinstance(qt, QuantTensor) and qt.pack == 2
+    assert qt.shape == params["blocks"][0]["attn"]["q_proj"]["kernel"].shape
+    ratio = quant.param_bytes(qp) / quant.param_bytes(params)
+    assert ratio <= 0.30 * 2, ratio    # fp32 baseline here (2x bf16 target)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 12)), jnp.int32)
+    want, _, _ = forward(params, cfg, toks)
+    got, _, _ = forward(qp, cfg, toks)
+    w, g = np.asarray(want), np.asarray(got)
+    rel = np.linalg.norm(g - w) / np.linalg.norm(w)
+    # random-init hidden states at 4 bits drift hard (~0.21 per-weight step
+    # compounding over layers); the trained-model accuracy gate lives in
+    # benchmarks/quant_accuracy.py (teacher-forced match >= 0.95)
+    assert rel < 0.6, rel
+    with use_backend("interpret"):     # kernel path agrees with XLA dequant
+        got_k, _, _ = forward(qp, cfg, toks)
+    np.testing.assert_allclose(np.asarray(got_k), g, rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# property: round-trip bound across the whole ladder
+# --------------------------------------------------------------------------
+from tests._hyp import given, settings, st  # noqa: E402
+
+
+def _roundtrip_case(dtype, nblocks, rows, n, regime, seed):
+    """|dequant(quant(w)) - w| <= step * block_amax for every ladder rung,
+    including all-zero rows, denormal rows, and single-element blocks."""
+    rows = rows * 2 if dtype == "int4" else rows   # packing needs even K
+    k = nblocks * rows
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    if regime == "zero_rows":
+        w[:: max(1, k // 2)] = 0.0
+    elif regime == "denormal":
+        w[0] = 1e-42                    # below fp32 normal range
+    elif regime == "outlier":
+        w[0, 0] = 3e4
+    q, s = quant.quantize_weight(jnp.asarray(w), dtype, block=rows)
+    sf = np.asarray(s, np.float32)
+    assert np.isfinite(sf).all() and (sf > 0).all()
+    back = np.asarray(quant.dequantize_weight(
+        q, s, pack=2 if dtype == "int4" else 1), np.float32)
+    assert np.isfinite(back).all()
+    # rounding half-step + fp16 scale-storage error, per block amax
+    step = {"int8": 1.5 / 127, "fp8": 0.08, "int4": 1.5 / 7}[dtype]
+    amax = np.abs(w).reshape(nblocks, rows, n).max(axis=1, keepdims=True)
+    bound = np.broadcast_to(step * amax + 1e-5,
+                            (nblocks, rows, n)).reshape(k, n)
+    # the amax floor means tiny blocks round to zero rather than scale up
+    bound = np.maximum(bound, 2e-4)
+    assert (np.abs(back - w) <= bound).all()
+
+
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(["int8", "fp8", "int4"]),
+       st.integers(1, 6),                    # scale blocks along K
+       st.integers(1, 5),                    # rows per scale block (x2 int4)
+       st.integers(1, 8),                    # N
+       st.sampled_from(["normal", "zero_rows", "denormal", "outlier"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_bound_property(dtype, nblocks, rows, n, regime,
+                                           seed):
+    _roundtrip_case(dtype, nblocks, rows, n, regime, seed)
+
+
+@pytest.mark.property
+@pytest.mark.parametrize("dtype", ["int8", "fp8", "int4"])
+@pytest.mark.parametrize("regime", ["normal", "zero_rows", "denormal",
+                                    "outlier"])
+def test_quantize_roundtrip_bound_seeded(dtype, regime):
+    """Seeded fallback of the same driver: keeps the round-trip bound alive
+    on containers without hypothesis (where @given-tests skip)."""
+    rng = np.random.default_rng(hash((dtype, regime)) % (2 ** 31))
+    for _ in range(10):
+        _roundtrip_case(dtype, int(rng.integers(1, 7)),
+                        int(rng.integers(1, 6)), int(rng.integers(1, 9)),
+                        regime, int(rng.integers(0, 2 ** 31 - 1)))
 
 
 # --------------------------------------------------------------------------
@@ -201,6 +411,44 @@ def test_paged_attention_quantized_parity(dtype):
     tol = 0.05 if dtype == "int8" else 0.2
     np.testing.assert_allclose(np.asarray(want), np.asarray(dense_out),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", ["int8", "fp8"])
+def test_paged_attention_no_float_page_bounce(dtype):
+    """The quantized paged-attention kernel contracts QK^T and PV directly
+    against the storage codes (native low-precision dot_general), folding
+    the per-row scales into the (G, page) scores — it must never
+    materialize a float page-sized (page, D) dequantized copy in-kernel."""
+    B, K, G, D, N, page, P = 2, 2, 4, 32, 5, 8, 3
+    q = _rand((B, K, G, D), scale=0.5)
+    kq, ks = quant.quantize_kv(_rand((N, page, K, D), seed=1), dtype)
+    vq, vs = quant.quantize_kv(_rand((N, page, K, D), seed=2), dtype)
+    tables = jax.random.randint(KEY, (B, P), 0, N, jnp.int32)
+    lengths = jnp.asarray([5, 20], jnp.int32)
+
+    with use_backend("interpret"):
+        jaxpr = jax.make_jaxpr(
+            lambda *a: ops.paged_attention(*a))(q, kq, vq, tables, lengths,
+                                                ks, vs)
+
+    bad = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None or not hasattr(aval, "shape"):
+                    continue
+                if (aval.dtype in (jnp.float32, jnp.bfloat16)
+                        and tuple(aval.shape[-2:]) == (page, D)):
+                    bad.append((eqn.primitive.name, aval.str_short()))
+            for p in eqn.params.values():
+                inner = getattr(p, "jaxpr", p)
+                if hasattr(inner, "eqns"):
+                    walk(inner)
+
+    walk(jaxpr.jaxpr)
+    assert not bad, f"float page-sized intermediates in kernel: {bad}"
 
 
 def test_quantized_pools_without_scales_error_loudly():

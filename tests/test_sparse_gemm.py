@@ -1,0 +1,189 @@
+"""Structured-sparse GEMM: block masks, 2:4 layout, registry negotiation,
+MoE expert consumption, and the density-discounted roofline/memfloor terms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref, use_backend
+from repro.kernels.dispatch import registry, resolve_backend
+from repro.kernels.gemm_sparse import (apply_block_mask,
+                                       block_mask_from_weight, densify_24,
+                                       sparsify_24)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x * scale
+
+
+# --------------------------------------------------------------------------
+# layout helpers
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.25])
+def test_block_mask_density_and_magnitude_order(density):
+    w = _rand((64, 64))
+    mask = block_mask_from_weight(w, 16, 16, density)
+    assert mask.shape == (4, 4) and mask.dtype == jnp.bool_
+    kept = int(np.asarray(mask).sum())
+    assert kept == max(1, round(density * 16))
+    # kept blocks are the largest by L2 norm
+    norms = np.asarray(w).reshape(4, 16, 4, 16)
+    norms = np.sqrt((norms ** 2).sum(axis=(1, 3)))
+    m = np.asarray(mask)
+    assert norms[m].min() >= norms[~m].max() if kept < 16 else True
+    wd = np.asarray(apply_block_mask(w, mask))
+    blocks = wd.reshape(4, 16, 4, 16)
+    assert all(not blocks[i, :, j, :].any()
+               for i in range(4) for j in range(4) if not m[i, j])
+
+
+def test_sparsify_24_keeps_top2_per_group():
+    w = _rand((32, 16))
+    vals, idx = sparsify_24(w)
+    assert vals.shape == (16, 16) and idx.shape == (16, 16)
+    assert idx.dtype == jnp.int8
+    dense = np.asarray(densify_24(vals, idx))
+    groups = dense.reshape(8, 4, 16)
+    nnz = (groups != 0).sum(axis=1)
+    assert (nnz <= 2).all()
+    # the survivors are the two largest |w| in each group of 4
+    worig = np.asarray(w).reshape(8, 4, 16)
+    for g in range(8):
+        for c in range(16):
+            keep = set(np.argsort(-np.abs(worig[g, :, c]))[:2])
+            got = set(np.nonzero(groups[g, :, c])[0])
+            assert got <= keep, (g, c, got, keep)
+
+
+# --------------------------------------------------------------------------
+# kernel parity (exact: a skipped block contributes exactly +0.0)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,bs", [((33, 64, 48), (16, 16)),
+                                      ((8, 96, 64), (32, 32))])
+@pytest.mark.parametrize("density", [0.5, 0.25])
+def test_gemm_sparse_block_matches_masked_dense(shape, bs, density):
+    M, K, N = shape
+    x = _rand((M, K))
+    w = _rand((K, N), seed=1)
+    mask = block_mask_from_weight(w, *bs, density)
+    wd = apply_block_mask(w, mask)
+    oracle = np.asarray(ref.gemm_ref(x, wd))
+    with use_backend("ref"):
+        want = ops.gemm_sparse(x, w, mask)
+    with use_backend("interpret"):
+        got = ops.gemm_sparse(x, w, mask)
+    np.testing.assert_array_equal(np.asarray(want), oracle)
+    np.testing.assert_allclose(np.asarray(got), oracle, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_sparse_epilogue_parity():
+    x = _rand((20, 32))
+    w = _rand((32, 32), seed=1)
+    mask = block_mask_from_weight(w, 16, 16, 0.5)
+    with use_backend("ref"):
+        want = ops.gemm_sparse(x, w, mask, scale=0.5, act="gelu")
+    with use_backend("interpret"):
+        got = ops.gemm_sparse(x, w, mask, scale=0.5, act="gelu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(17, 32, 24), (8, 64, 130)])
+def test_gemm_sparse_24_matches_densified(shape):
+    M, K, N = shape
+    x = _rand((M, K))
+    vals, idx = sparsify_24(_rand((K, N), seed=1))
+    oracle = np.asarray(ref.gemm_ref(x, densify_24(vals, idx)))
+    with use_backend("ref"):
+        want = ops.gemm_sparse_24(x, vals, idx)
+    with use_backend("interpret"):
+        got = ops.gemm_sparse_24(x, vals, idx)
+    np.testing.assert_array_equal(np.asarray(want), oracle)
+    np.testing.assert_allclose(np.asarray(got), oracle, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_sparse_negotiation():
+    """Shapes pick the layout: block mask -> pallas_block, (K/2, N) int8
+    indices -> pallas_24, anything the kernels can't tile -> ref oracle."""
+    x = _rand((8, 64))
+    w = _rand((64, 32), seed=1)
+    mask = block_mask_from_weight(w, 16, 16, 0.5)
+    be = resolve_backend("interpret")
+    req = registry.request("gemm_sparse", x, w, mask)
+    assert registry.select("gemm_sparse", req, be).name == "pallas_block"
+    vals, idx = sparsify_24(w)
+    req = registry.request("gemm_sparse", x, vals, idx)
+    assert registry.select("gemm_sparse", req, be).name == "pallas_24"
+    # a mask grid that does not divide K negotiates down to the oracle
+    badmask = jnp.ones((3, 2), jnp.bool_)
+    req = registry.request("gemm_sparse", x, w, badmask)
+    assert registry.select("gemm_sparse", req, be).name == "ref"
+
+
+# --------------------------------------------------------------------------
+# MoE consumption
+# --------------------------------------------------------------------------
+def test_sparsified_experts_kernel_matches_xla():
+    """sparsify_experts hard-zeroes the slabs AND stores masks: the XLA
+    einsum path and the gemm_sparse kernel path compute the same function."""
+    from repro.models.moe import _expert_ffn, sparsify_experts
+
+    E, d, f, G, C = 2, 32, 64, 1, 8
+    p = {"experts": {"gate": _rand((E, d, f), seed=1),
+                     "up": _rand((E, d, f), seed=2),
+                     "down": _rand((E, f, d), seed=3)}}
+    sp = sparsify_experts(p, 0.5, block=(16, 16))
+    assert sp["experts"]["gate_mask"].shape == (E, d // 16, f // 16)
+    # pruned slabs really are hard-zeroed outside kept blocks
+    gm = np.asarray(sp["experts"]["gate_mask"][0])
+    g0 = np.asarray(sp["experts"]["gate"][0]).reshape(
+        d // 16, 16, f // 16, 16).transpose(0, 2, 1, 3)
+    assert not g0[~gm].any()
+    xe = _rand((G, E, C, d), seed=4, scale=0.3)
+    want = _expert_ffn(sp, xe, "silu", jnp.float32)       # XLA einsum
+    with use_backend("interpret"):                        # gemm_sparse path
+        got = _expert_ffn(sp, xe, "silu", jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # and pruning actually changed the function vs the dense experts
+    dense = _expert_ffn(p, xe, "silu", jnp.float32)
+    assert np.abs(np.asarray(dense) - np.asarray(want)).max() > 0
+
+
+# --------------------------------------------------------------------------
+# roofline / memfloor density terms
+# --------------------------------------------------------------------------
+def test_sparse_gemm_terms_scale_with_density():
+    from repro.core.roofline import sparse_gemm_terms
+
+    base = sparse_gemm_terms(64, 128, 256, density=1.0)
+    half = sparse_gemm_terms(64, 128, 256, density=0.5)
+    assert half["flops"] == pytest.approx(base["flops"] * 0.5)
+    assert half["weight_bytes"] == pytest.approx(base["weight_bytes"] * 0.5)
+    assert half["act_bytes"] == base["act_bytes"]         # activations dense
+    masked = sparse_gemm_terms(64, 128, 256, density=0.5,
+                               mask_block=(16, 16))
+    assert masked["mask_bytes"] == (128 // 16) * (256 // 16)
+    with pytest.raises(ValueError):
+        sparse_gemm_terms(8, 8, 8, density=0.0)
+
+
+def test_memfloor_weight_bytes_follow_density():
+    from repro.configs import ShapeConfig, get_arch
+    from repro.core.memfloor import MeshSizes, hbm_bytes_floor
+
+    cfg = get_arch("qwen3-0.6b")
+    shape = ShapeConfig(name="d", kind="decode", seq_len=2048, global_batch=8)
+    mesh = MeshSizes(n_data=1, n_model=1)
+    base = hbm_bytes_floor(cfg, shape, mesh, fsdp=False)
+    half = hbm_bytes_floor(cfg.replace(weight_density=0.5), shape, mesh,
+                           fsdp=False)
+    assert half["weights"] == pytest.approx(base["weights"] / 2)
+    assert half["cache"] == base["cache"]                 # KV is unaffected
+    # int4 + half density compound: 0.25x the bf16 weight stream
+    q = hbm_bytes_floor(cfg.replace(weight_dtype="int4", weight_density=0.5),
+                        shape, mesh, fsdp=False)
+    assert q["weights"] == pytest.approx(base["weights"] / 8)
